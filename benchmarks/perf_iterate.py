@@ -1,0 +1,98 @@
+"""Perf-iteration harness (EXPERIMENTS.md §Perf).
+
+Lowers one (arch x shape) cell under a named variant, prints the roofline
+terms, and appends the record to results/perf/<cell>.jsonl — the
+hypothesis -> change -> measure log lives in EXPERIMENTS.md.
+
+    PYTHONPATH=src python -m benchmarks.perf_iterate \
+        --arch granite-8b --shape train_4k --variant baseline
+
+Variants are ModelConfig overrides (plus env toggles) registered below; add
+new ones as the hillclimb progresses.
+"""
+import os
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=512")
+
+import argparse
+import json
+
+
+VARIANTS = {
+    "baseline": {},
+    "no_sp": {"sequence_parallel": False},
+    "no_remat": {"remat": False},
+    "no_sp_no_remat": {"sequence_parallel": False, "remat": False},
+    # chunked attention at 4k (smaller transient scores)
+    "chunked_attn": {"_attn_full_max": 2048},
+    # bigger kv chunks for the 32k paths
+    "attn_bkv_4096": {"_attn_bkv": 4096},
+    # beyond-paper: STT-scheduled explicit shard_map collectives
+    "explicit": {"explicit_collectives": True},
+    "explicit_chunked": {"explicit_collectives": True,
+                         "_attn_full_max": 2048},
+    "explicit_no_remat": {"explicit_collectives": True, "remat": False},
+}
+
+
+def run_variant(arch: str, shape: str, variant: str, multi: bool = False):
+    from repro.launch import dryrun
+    from repro.models import attention
+
+    over = dict(VARIANTS[variant])
+    full_max = over.pop("_attn_full_max", None)
+    bkv = over.pop("_attn_bkv", None)
+    old_max = attention.FULL_SCORES_MAX_LEN
+    if full_max is not None:
+        attention.FULL_SCORES_MAX_LEN = full_max
+    if bkv is not None:
+        os.environ["REPRO_ATTN_BKV"] = str(bkv)
+    try:
+        import repro.launch.specs as specs_mod
+        orig = specs_mod.input_specs
+
+        def patched(a, s, m, overrides=None):
+            return orig(a, s, m, overrides={**(overrides or {}), **over})
+
+        specs_mod.input_specs = patched
+        try:
+            rec = dryrun.run_cell(arch, shape, multi)
+        finally:
+            specs_mod.input_specs = orig
+    finally:
+        attention.FULL_SCORES_MAX_LEN = old_max
+        os.environ.pop("REPRO_ATTN_BKV", None)
+    rec["variant"] = variant
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--variant", default="baseline", choices=list(VARIANTS))
+    ap.add_argument("--multi", action="store_true")
+    ap.add_argument("--out", default="results/perf")
+    args = ap.parse_args()
+
+    rec = run_variant(args.arch, args.shape, args.variant, args.multi)
+    r = rec["roofline"]
+    print(f"\n{args.arch}/{args.shape} [{args.variant}]")
+    print(f"  compute_s    {r['compute_s']:.4f}")
+    print(f"  memory_s     {r['memory_s']:.4f}")
+    print(f"  collective_s {r['collective_s']:.4f}")
+    print(f"  bottleneck   {r['bottleneck']}")
+    print(f"  MFU          {r['roofline_fraction']:.4f}")
+    print(f"  useful ratio {r['useful_flops_ratio']:.3f}")
+    print(f"  temp GiB     {rec['memory']['temp_bytes'] / 2**30:.1f} "
+          f"(fits={rec['memory']['fits_hbm']})")
+    os.makedirs(args.out, exist_ok=True)
+    path = os.path.join(args.out,
+                        f"{args.arch}_{args.shape}.jsonl")
+    with open(path, "a") as f:
+        f.write(json.dumps(rec) + "\n")
+    print(f"appended -> {path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,68 @@
+"""Roofline report: aggregate the dry-run JSONs into the EXPERIMENTS table.
+
+Reads results/dryrun/*.json (produced by repro.launch.dryrun) and prints the
+per-cell three-term roofline, bottleneck, useful-flops ratio, and HBM fit —
+single-pod for the table (per the assignment), multi-pod rows on request.
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+
+def load(out_dir: str):
+    recs = []
+    for path in sorted(glob.glob(os.path.join(out_dir, "*.json"))):
+        if os.path.basename(path).startswith("_"):
+            continue
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def table(recs, mesh="single"):
+    rows = [r for r in recs if r["mesh"] == mesh]
+    rows.sort(key=lambda r: (r["arch"], r["shape"]))
+    hdr = (f"{'arch':22s} {'shape':12s} {'kind':8s} {'compute_s':>10s} "
+           f"{'memory_s':>10s} {'coll_s':>10s} {'bottleneck':>11s} "
+           f"{'MFU':>6s} {'useful':>7s} {'fits':>5s}")
+    print(hdr)
+    print("-" * len(hdr))
+    for r in rows:
+        t = r["roofline"]
+        print(f"{r['arch']:22s} {r['shape']:12s} {r['kind']:8s} "
+              f"{t['compute_s']:10.4f} {t['memory_s']:10.4f} "
+              f"{t['collective_s']:10.4f} {t['bottleneck']:>11s} "
+              f"{t['roofline_fraction']:6.3f} {t['useful_flops_ratio']:7.3f} "
+              f"{str(r['memory']['fits_hbm']):>5s}")
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="results/dryrun")
+    ap.add_argument("--mesh", default="single", choices=["single", "multi"])
+    args = ap.parse_args()
+    recs = load(args.dir)
+    if not recs:
+        print(f"no dry-run records in {args.dir} — run "
+              "`python -m repro.launch.dryrun` first")
+        return
+    rows = table(recs, args.mesh)
+    bottlenecks = {}
+    for r in rows:
+        bottlenecks.setdefault(r["roofline"]["bottleneck"], []).append(r)
+    print(f"\n{len(rows)} cells ({args.mesh}-pod); bottleneck distribution: "
+          + ", ".join(f"{k}={len(v)}" for k, v in sorted(bottlenecks.items())))
+    skips = os.path.join(args.dir, "_skips.json")
+    if os.path.exists(skips):
+        with open(skips) as f:
+            s = json.load(f)
+        print(f"{len(s)} cells skipped by assignment rule (full-attention "
+              "long_500k): " + ", ".join(x["arch"] for x in s))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,68 @@
+"""Benchmark aggregator — one section per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run
+
+Sections:
+  fig5   — normalized dataflow performance per tensor algebra (cycle model)
+  fig6   — GEMM / depthwise-conv design-space area+power sweep
+  table3 — MM throughput comparison (XLA baselines + TPU roofline projection)
+  roofline — aggregated dry-run roofline table (if results/dryrun exists)
+"""
+from __future__ import annotations
+
+import sys
+import time
+import traceback
+
+
+def _section(title):
+    print("\n" + "=" * 72)
+    print(f"== {title}")
+    print("=" * 72)
+
+
+def main() -> None:
+    t0 = time.time()
+    failures = []
+
+    _section("Fig. 5 — dataflow performance (paper cycle model)")
+    try:
+        from benchmarks import fig5_dataflow_perf
+        fig5_dataflow_perf.main()
+    except Exception:
+        failures.append("fig5")
+        traceback.print_exc()
+
+    _section("Fig. 6 — design-space exploration (area / power)")
+    try:
+        from benchmarks import fig6_dse
+        fig6_dse.main()
+    except Exception:
+        failures.append("fig6")
+        traceback.print_exc()
+
+    _section("Table III — matmul throughput comparison")
+    try:
+        from benchmarks import table3_comparison
+        table3_comparison.main()
+    except Exception:
+        failures.append("table3")
+        traceback.print_exc()
+
+    _section("Roofline — dry-run aggregate (single-pod)")
+    try:
+        from benchmarks import roofline_report
+        sys.argv = ["roofline_report"]
+        roofline_report.main()
+    except Exception:
+        failures.append("roofline")
+        traceback.print_exc()
+
+    print(f"\nbenchmarks done in {time.time() - t0:.1f}s; "
+          f"failures: {failures or 'none'}")
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

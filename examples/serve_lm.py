@@ -1,0 +1,53 @@
+"""Serve a small model with batched requests through the decode engine.
+
+    PYTHONPATH=src python examples/serve_lm.py [--arch h2o-danube-1.8b]
+
+Prefills a batch of prompts, then decodes greedily — exercising the same
+prefill/decode_step functions the dry-run's serve cells lower.
+"""
+import argparse
+
+import numpy as np
+import jax
+
+from repro.configs import get_config
+from repro.models import init_params, split
+from repro.serve.engine import DecodeEngine, ServeConfig
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="h2o-danube-1.8b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=24)
+    ap.add_argument("--new-tokens", type=int, default=16)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch).reduced()
+    print(f"serving {cfg.name} ({cfg.family}); "
+          f"{cfg.param_count() / 1e6:.2f}M params (reduced config)")
+    params, _ = split(init_params(jax.random.PRNGKey(0), cfg))
+    engine = DecodeEngine(params, cfg,
+                          ServeConfig(max_new_tokens=args.new_tokens))
+
+    rng = np.random.default_rng(0)
+    prompts = rng.integers(0, cfg.vocab,
+                           size=(args.batch, args.prompt_len)).astype(np.int32)
+    frontend = None
+    if cfg.family in ("encdec", "vlm"):
+        frontend = 0.05 * rng.standard_normal(
+            (args.batch, cfg.frontend_tokens, cfg.d_model)).astype(np.float32)
+
+    gen, stats = engine.generate(prompts, frontend=frontend)
+    print(f"prefill {stats['prefill_len']} tokens -> generated "
+          f"{stats['generated']} per sequence")
+    for i, row in enumerate(gen):
+        print(f"  seq {i}: {row.tolist()}")
+    # determinism check (greedy)
+    gen2, _ = engine.generate(prompts, frontend=frontend)
+    assert np.array_equal(gen, gen2), "greedy decode must be deterministic"
+    print("serve OK (deterministic greedy decode)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+"""Atomic/async/elastic checkpointing."""
+from . import store
+from .store import AsyncCheckpointer, latest_step, restore, save

@@ -1,0 +1,236 @@
+"""Tensor-algebra IR: perfect nested loops + per-tensor linear access maps.
+
+This is TensorLib's input language (paper §II, Table II).  A computation is
+
+    out[I_out] += in1[I_1] * in2[I_2] * ...
+
+where every index vector is a *linear* function of the loop iteration vector:
+``I = A·x`` with an integer access matrix ``A``.  Affine accesses such as the
+convolution's ``y + p`` are linear in the loop vector (a row with two ones),
+so the whole of Table II fits without affine offsets.
+
+The IR carries concrete loop bounds so the same object drives
+  * exact dataflow classification (access matrices only),
+  * the cycle-accurate-ish cost model (bounds),
+  * a functional space-time simulator used to *prove* a schedule computes the
+    right thing (tests), and
+  * reference evaluation in numpy for oracle checks.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from . import linalg
+from .linalg import Mat
+
+
+@dataclasses.dataclass(frozen=True)
+class TensorAccess:
+    """One tensor operand of the algebra.
+
+    ``access`` has one row per tensor dimension and one column per loop
+    iterator: ``index = access @ x``.
+    """
+
+    name: str
+    access: Mat                    # (tensor_rank, n_loops) exact matrix
+    is_output: bool = False
+
+    def rank(self) -> int:
+        return len(self.access)
+
+    def index_of(self, x: Sequence[int]) -> Tuple[int, ...]:
+        return linalg.as_int_tuple(linalg.matvec(self.access, list(x)))
+
+
+@dataclasses.dataclass(frozen=True)
+class TensorAlgebra:
+    """A perfect loop nest computing ``output += prod(inputs)``."""
+
+    name: str
+    loops: Tuple[str, ...]               # iterator names, outermost first
+    bounds: Tuple[int, ...]              # concrete loop trip counts
+    tensors: Tuple[TensorAccess, ...]    # inputs first, output last
+
+    def __post_init__(self):
+        assert len(self.loops) == len(self.bounds)
+        assert sum(t.is_output for t in self.tensors) == 1
+        for t in self.tensors:
+            for row in t.access:
+                assert len(row) == len(self.loops), (self.name, t.name)
+
+    # -- convenience ------------------------------------------------------
+    @property
+    def output(self) -> TensorAccess:
+        return next(t for t in self.tensors if t.is_output)
+
+    @property
+    def inputs(self) -> Tuple[TensorAccess, ...]:
+        return tuple(t for t in self.tensors if not t.is_output)
+
+    def loop_index(self, name: str) -> int:
+        return self.loops.index(name)
+
+    def total_macs(self) -> int:
+        n = 1
+        for b in self.bounds:
+            n *= b
+        return n
+
+    def with_bounds(self, **bounds: int) -> "TensorAlgebra":
+        new = list(self.bounds)
+        for k, v in bounds.items():
+            new[self.loop_index(k)] = v
+        return dataclasses.replace(self, bounds=tuple(new))
+
+    def tensor_shape(self, t: TensorAccess) -> Tuple[int, ...]:
+        """Bounding-box shape of a tensor given the loop bounds (affine
+        accesses like y+p make a dim as large as the sum of the bounds)."""
+        dims = []
+        for row in t.access:
+            hi = 0
+            for coef, b in zip(row, self.bounds):
+                c = int(coef)
+                if c > 0:
+                    hi += c * (b - 1)
+                elif c < 0:
+                    raise ValueError("negative access coefficients unsupported")
+            dims.append(hi + 1)
+        return tuple(dims)
+
+    # -- reference evaluation ----------------------------------------------
+    def reference(self, operands: Dict[str, np.ndarray]) -> np.ndarray:
+        """Evaluate the loop nest directly in numpy (oracle; small bounds)."""
+        out = np.zeros(self.tensor_shape(self.output),
+                       dtype=np.result_type(*[v.dtype for v in operands.values()]))
+        for x in itertools.product(*[range(b) for b in self.bounds]):
+            prod = None
+            for t in self.inputs:
+                v = operands[t.name][t.index_of(x)]
+                prod = v if prod is None else prod * v
+            out[self.output.index_of(x)] += prod
+        return out
+
+    def random_operands(self, seed: int = 0) -> Dict[str, np.ndarray]:
+        rng = np.random.default_rng(seed)
+        return {
+            t.name: rng.integers(-4, 5, size=self.tensor_shape(t)).astype(np.int64)
+            for t in self.inputs
+        }
+
+
+# ---------------------------------------------------------------------------
+# Table II — the six evaluated tensor algebras
+# ---------------------------------------------------------------------------
+
+def _acc(loops: Sequence[str], rows: Sequence[Dict[str, int]]) -> Mat:
+    return linalg.mat(
+        [[row.get(l, 0) for l in loops] for row in rows]
+    )
+
+
+def gemm(m: int = 64, n: int = 64, k: int = 64) -> TensorAlgebra:
+    """C[m,n] += A[m,k] * B[n,k]   (paper's GEMM layout)."""
+    loops = ("m", "n", "k")
+    return TensorAlgebra(
+        name="gemm", loops=loops, bounds=(m, n, k),
+        tensors=(
+            TensorAccess("A", _acc(loops, [{"m": 1}, {"k": 1}])),
+            TensorAccess("B", _acc(loops, [{"n": 1}, {"k": 1}])),
+            TensorAccess("C", _acc(loops, [{"m": 1}, {"n": 1}]), is_output=True),
+        ),
+    )
+
+
+def batched_gemv(m: int = 16, k: int = 64, n: int = 64) -> TensorAlgebra:
+    """C[m,n] += A[m,k,n] * B[m,k].  Tensor A has no reuse (unicast only)."""
+    loops = ("m", "n", "k")
+    return TensorAlgebra(
+        name="batched_gemv", loops=loops, bounds=(m, n, k),
+        tensors=(
+            TensorAccess("A", _acc(loops, [{"m": 1}, {"k": 1}, {"n": 1}])),
+            TensorAccess("B", _acc(loops, [{"m": 1}, {"k": 1}])),
+            TensorAccess("C", _acc(loops, [{"m": 1}, {"n": 1}]), is_output=True),
+        ),
+    )
+
+
+def conv2d(k: int = 64, c: int = 64, y: int = 14, x: int = 14,
+           p: int = 3, q: int = 3) -> TensorAlgebra:
+    """C[k,y,x] += A[c,y+p,x+q] * B[k,c,p,q]."""
+    loops = ("k", "c", "y", "x", "p", "q")
+    return TensorAlgebra(
+        name="conv2d", loops=loops, bounds=(k, c, y, x, p, q),
+        tensors=(
+            TensorAccess("A", _acc(loops, [{"c": 1}, {"y": 1, "p": 1},
+                                           {"x": 1, "q": 1}])),
+            TensorAccess("B", _acc(loops, [{"k": 1}, {"c": 1}, {"p": 1},
+                                           {"q": 1}])),
+            TensorAccess("C", _acc(loops, [{"k": 1}, {"y": 1}, {"x": 1}]),
+                         is_output=True),
+        ),
+    )
+
+
+def depthwise_conv(k: int = 64, y: int = 14, x: int = 14,
+                   p: int = 3, q: int = 3) -> TensorAlgebra:
+    """C[k,y,x] += A[k,y+p,x+q] * B[k,p,q].  No large reduction dim."""
+    loops = ("k", "y", "x", "p", "q")
+    return TensorAlgebra(
+        name="depthwise_conv", loops=loops, bounds=(k, y, x, p, q),
+        tensors=(
+            TensorAccess("A", _acc(loops, [{"k": 1}, {"y": 1, "p": 1},
+                                           {"x": 1, "q": 1}])),
+            TensorAccess("B", _acc(loops, [{"k": 1}, {"p": 1}, {"q": 1}])),
+            TensorAccess("C", _acc(loops, [{"k": 1}, {"y": 1}, {"x": 1}]),
+                         is_output=True),
+        ),
+    )
+
+
+def mttkrp(i: int = 32, j: int = 32, k: int = 16, l: int = 16) -> TensorAlgebra:
+    """D[i,j] += A[i,k,l] * B[k,j] * C[l,j]."""
+    loops = ("i", "j", "k", "l")
+    return TensorAlgebra(
+        name="mttkrp", loops=loops, bounds=(i, j, k, l),
+        tensors=(
+            TensorAccess("A", _acc(loops, [{"i": 1}, {"k": 1}, {"l": 1}])),
+            TensorAccess("B", _acc(loops, [{"k": 1}, {"j": 1}])),
+            TensorAccess("C", _acc(loops, [{"l": 1}, {"j": 1}])),
+            TensorAccess("D", _acc(loops, [{"i": 1}, {"j": 1}]), is_output=True),
+        ),
+    )
+
+
+def ttmc(i: int = 16, j: int = 16, k: int = 16, l: int = 16,
+         m: int = 16) -> TensorAlgebra:
+    """D[i,j,k] += A[i,l,m] * B[l,j] * C[m,k]."""
+    loops = ("i", "j", "k", "l", "m")
+    return TensorAlgebra(
+        name="ttmc", loops=loops, bounds=(i, j, k, l, m),
+        tensors=(
+            TensorAccess("A", _acc(loops, [{"i": 1}, {"l": 1}, {"m": 1}])),
+            TensorAccess("B", _acc(loops, [{"l": 1}, {"j": 1}])),
+            TensorAccess("C", _acc(loops, [{"m": 1}, {"k": 1}])),
+            TensorAccess("D", _acc(loops, [{"i": 1}, {"j": 1}, {"k": 1}]),
+                         is_output=True),
+        ),
+    )
+
+
+PAPER_ALGEBRAS = {
+    "gemm": gemm,
+    "batched_gemv": batched_gemv,
+    "conv2d": conv2d,
+    "depthwise_conv": depthwise_conv,
+    "mttkrp": mttkrp,
+    "ttmc": ttmc,
+}
+
+
+def get_algebra(name: str, **bounds) -> TensorAlgebra:
+    return PAPER_ALGEBRAS[name](**bounds)

@@ -1,0 +1,113 @@
+"""Design-space exploration: enumerate STT matrices -> distinct dataflows.
+
+The paper sweeps 148 GEMM dataflows and 33 depthwise-conv dataflows in a
+16x16 array (Fig. 6).  Their enumeration universe is not spelled out; ours is
+stated precisely:
+
+  * loop selections: every ordered choice of 3 iterators out of the nest
+    (order matters: the first two map to space, the last to time — but
+    permutations of the two space rows produce mirrored hardware, so we
+    canonicalize by sorting the space pair),
+  * T entries in {-1, 0, 1}, det(T) != 0,
+  * dedupe by ``Dataflow.signature`` (per-tensor class + interconnect
+    directions) — two T's generating identical hardware count once.
+
+Every enumerated point is costed with ``PaperCycleModel`` to produce the
+area/power scatter (benchmarks/fig6_dse.py).
+"""
+from __future__ import annotations
+
+import itertools
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+from . import linalg
+from .algebra import TensorAlgebra
+from .costmodel import ArrayConfig, CostReport, PaperCycleModel
+from .stt import Dataflow, DataflowClass, InvalidSTT, apply_stt
+
+
+def enumerate_T(entries: Sequence[int] = (-1, 0, 1), k: int = 3
+                ) -> Iterable[linalg.Mat]:
+    """All full-rank k x k matrices with entries drawn from ``entries``."""
+    for flat in itertools.product(entries, repeat=k * k):
+        T = linalg.mat([flat[i * k:(i + 1) * k] for i in range(k)])
+        if linalg.det(T) != 0:
+            yield T
+
+
+def loop_selections(alg: TensorAlgebra) -> List[Tuple[str, ...]]:
+    """Ordered 3-loop selections with the space pair canonicalized."""
+    sels = set()
+    for combo in itertools.permutations(alg.loops, 3):
+        space = tuple(sorted(combo[:2]))
+        sels.add((space[0], space[1], combo[2]))
+    return sorted(sels)
+
+
+def is_realizable(df: Dataflow) -> bool:
+    """Filter dataflows the paper's hardware templates cannot build:
+
+    * systolic delay must be a small constant (|dt| <= 2 registers) and the
+      hop must reach a neighbouring PE (|dp_i| <= 1),
+    * an *output* tensor cannot be pure-multicast over time rank-2 shapes
+      with no accumulation order (handled by REDUCTION tree for rank-1).
+    """
+    for t in df.tensors:
+        if t.cls in (DataflowClass.SYSTOLIC, DataflowClass.SYSTOLIC_MULTICAST):
+            if any(abs(d) > 1 for d in t.dp) or abs(t.dt) > 2:
+                return False
+        if t.cls in (DataflowClass.MULTICAST, DataflowClass.REDUCTION,
+                     DataflowClass.BROADCAST):
+            if any(abs(d) > 1 for d in (t.dp or ())):
+                return False
+    return True
+
+
+def enumerate_dataflows(alg: TensorAlgebra,
+                        selections: Optional[Sequence[Tuple[str, ...]]] = None,
+                        entries: Sequence[int] = (-1, 0, 1),
+                        realizable_only: bool = True,
+                        ) -> Dict[Tuple, Dataflow]:
+    """Map signature -> one representative Dataflow per distinct hardware."""
+    out: Dict[Tuple, Dataflow] = {}
+    sels = list(selections) if selections is not None else loop_selections(alg)
+    for sel in sels:
+        for T in enumerate_T(entries):
+            try:
+                df = apply_stt(alg, sel, T)
+            except InvalidSTT:
+                continue
+            if realizable_only and not is_realizable(df):
+                continue
+            key = (df.selected, df.signature)
+            if key not in out:
+                out[key] = df
+    return out
+
+
+def sweep(alg: TensorAlgebra,
+          cfg: ArrayConfig = ArrayConfig(),
+          selections: Optional[Sequence[Tuple[str, ...]]] = None,
+          ) -> List[CostReport]:
+    """Full DSE sweep: enumerate + cost every distinct dataflow."""
+    model = PaperCycleModel(cfg)
+    reports = []
+    for df in enumerate_dataflows(alg, selections).values():
+        reports.append(model.evaluate(alg, df))
+    return reports
+
+
+def pareto_front(reports: Sequence[CostReport]
+                 ) -> List[CostReport]:
+    """Pareto-optimal points over (cycles, area, power) — all minimized."""
+    front = []
+    for r in reports:
+        dominated = any(
+            (o.cycles <= r.cycles and o.area_units <= r.area_units
+             and o.power_mw <= r.power_mw)
+            and (o.cycles < r.cycles or o.area_units < r.area_units
+                 or o.power_mw < r.power_mw)
+            for o in reports)
+        if not dominated:
+            front.append(r)
+    return front

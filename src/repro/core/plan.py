@@ -1,0 +1,172 @@
+"""Plan generation: one STT matrix -> kernel template + collective schedule.
+
+This is TensorLib's "hardware generation" step (§V) re-targeted at TPU
+(DESIGN.md §2).  The same per-tensor classification drives two levels:
+
+* **KernelPlan** (intra-chip): which Pallas GEMM template runs on a core —
+  the stationary tensor decides which operand block stays resident in VMEM
+  across the reduction grid axis (paper Fig. 3 module (c)/(d) = VMEM
+  residency; systolic shift = the software pipeline's revolving buffer).
+
+* **CommPlan** (inter-chip): which collectives connect the chip "PE array" —
+  multicast = all_gather, reduction tree = psum / psum_scatter, systolic =
+  ppermute ring, stationary = sharded with no motion, unicast = fully
+  partitioned streaming (no collective).
+
+``plan_for`` is the faithful analogue of the paper's module-selection table:
+it is a *total* function of the classification, not of the algebra, which is
+exactly the paper's reuse argument — new dataflows reuse the same templates.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+from .stt import Dataflow, DataflowClass, TensorDataflow
+
+
+# map: (class, is_output) -> PE-internal module of paper Fig. 3
+PAPER_PE_MODULES = {
+    (DataflowClass.SYSTOLIC, False): "a:systolic-in",
+    (DataflowClass.SYSTOLIC, True): "b:systolic-out",
+    (DataflowClass.STATIONARY, False): "c:stationary-in(double-buffer)",
+    (DataflowClass.STATIONARY, True): "d:stationary-out(double-buffer)",
+    (DataflowClass.MULTICAST, False): "e:direct-in",
+    (DataflowClass.UNICAST, False): "e:direct-in",
+    (DataflowClass.UNICAST, True): "f:direct-out",
+    (DataflowClass.REDUCTION, True): "f:direct-out(+reduction-tree)",
+    (DataflowClass.BROADCAST, False): "e:direct-in",
+    (DataflowClass.MULTICAST_STATIONARY, False): "e+c:tap+double-buffer",
+    (DataflowClass.MULTICAST_STATIONARY, True): "f+d:tree+double-buffer",
+    (DataflowClass.SYSTOLIC_MULTICAST, False): "e+a:tap+systolic",
+    (DataflowClass.SYSTOLIC_MULTICAST, True): "f+b:tree+systolic",
+    (DataflowClass.BROADCAST, True): "f:reduction-tree-2d",
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class TensorCommPlan:
+    """Mesh-level realization for one tensor (DESIGN.md §2, level 2)."""
+
+    tensor: str
+    kind: str          # shard | all_gather | psum | ppermute_ring | stream
+    mesh_axis: Optional[str] = None   # axis the collective runs over
+    ring_shift: Tuple[int, ...] = ()  # systolic direction on the mesh
+    delay: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class CommPlan:
+    dataflow: str
+    tensors: Tuple[TensorCommPlan, ...]
+
+    def by_tensor(self) -> Dict[str, TensorCommPlan]:
+        return {t.tensor: t for t in self.tensors}
+
+    @property
+    def collective_kinds(self) -> Tuple[str, ...]:
+        return tuple(sorted({t.kind for t in self.tensors}))
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelPlan:
+    """Intra-chip Pallas template selection."""
+
+    dataflow: str
+    template: str                      # which kernels/stt_gemm template
+    resident_tensor: Optional[str]     # block pinned in VMEM across k-steps
+    streamed: Tuple[str, ...]          # operands double-buffered by pipeline
+    reduction_in_kernel: bool          # accumulate over a grid axis?
+
+
+def _axis_for(dp: Tuple[int, ...], axes: Tuple[str, str]) -> Optional[str]:
+    """Mesh axis along which a reuse direction moves (None if diagonal —
+    realized as two chained collectives, we report the major axis)."""
+    nz = [i for i, d in enumerate(dp) if d != 0]
+    if not nz:
+        return None
+    return axes[nz[0]]
+
+
+def comm_plan_for(df: Dataflow, axes: Tuple[str, str] = ("data", "model")
+                  ) -> CommPlan:
+    """Per-tensor mesh collectives generated from the classification."""
+    plans = []
+    for t in df.tensors:
+        c = t.cls
+        if c is DataflowClass.STATIONARY:
+            plans.append(TensorCommPlan(t.tensor, "shard"))
+        elif c is DataflowClass.MULTICAST:
+            plans.append(TensorCommPlan(t.tensor, "all_gather",
+                                        _axis_for(t.dp, axes)))
+        elif c is DataflowClass.BROADCAST:
+            plans.append(TensorCommPlan(t.tensor, "all_gather", axes[0]))
+        elif c is DataflowClass.REDUCTION:
+            plans.append(TensorCommPlan(t.tensor, "psum",
+                                        _axis_for(t.dp, axes)))
+        elif c is DataflowClass.SYSTOLIC:
+            plans.append(TensorCommPlan(t.tensor, "ppermute_ring",
+                                        _axis_for(t.dp, axes),
+                                        ring_shift=t.dp, delay=t.dt))
+        elif c is DataflowClass.MULTICAST_STATIONARY:
+            plans.append(TensorCommPlan(t.tensor, "all_gather",
+                                        _axis_for(t.dp_multicast, axes)))
+        elif c is DataflowClass.SYSTOLIC_MULTICAST:
+            plans.append(TensorCommPlan(t.tensor, "ppermute_ring",
+                                        _axis_for(t.dp, axes),
+                                        ring_shift=t.dp, delay=t.dt))
+        else:  # UNICAST
+            plans.append(TensorCommPlan(t.tensor, "stream"))
+    return CommPlan(df.name, tuple(plans))
+
+
+def kernel_plan_for(df: Dataflow) -> KernelPlan:
+    """Select the Pallas GEMM template from the classification.
+
+    TPU adaptation (DESIGN.md D1): the MXU replaces the PE array, so
+    "which tensor is stationary" becomes "which block is VMEM-resident
+    across the reduction axis of the Pallas grid".
+    """
+    by = df.by_tensor()
+    stationary = [t.tensor for t in df.tensors
+                  if t.cls in (DataflowClass.STATIONARY,
+                               DataflowClass.MULTICAST_STATIONARY)]
+    out_name = df.tensors[-1].tensor
+    out_cls = df.tensors[-1].cls
+
+    if out_name in stationary:
+        template = "output_stationary"
+        resident = out_name
+    elif stationary:
+        template = "operand_stationary"
+        resident = stationary[0]
+    elif out_cls is DataflowClass.REDUCTION:
+        template = "reduction_tree"
+        resident = None
+    else:
+        template = "streaming"
+        resident = None
+    streamed = tuple(t.tensor for t in df.tensors if t.tensor != resident)
+    return KernelPlan(df.name, template, resident, streamed,
+                      reduction_in_kernel=(template == "output_stationary"))
+
+
+@dataclasses.dataclass(frozen=True)
+class ExecutionPlan:
+    """The complete generated 'accelerator': paper modules for reference,
+    kernel template, and mesh collective schedule."""
+
+    dataflow: Dataflow
+    pe_modules: Tuple[str, ...]
+    kernel: KernelPlan
+    comm: CommPlan
+
+
+def plan_for(df: Dataflow, axes: Tuple[str, str] = ("data", "model")
+             ) -> ExecutionPlan:
+    is_out = {t.tensor: (t.tensor == df.tensors[-1].tensor)
+              for t in df.tensors}
+    modules = tuple(
+        f"{t.tensor}->{PAPER_PE_MODULES[(t.cls, is_out[t.tensor])]}"
+        for t in df.tensors)
+    return ExecutionPlan(df, modules, kernel_plan_for(df), comm_plan_for(df, axes))

@@ -1,0 +1,102 @@
+"""Target-hardware model: TPU v5e constants and roofline terms.
+
+The container is CPU-only; TPU v5e is the *target*.  All roofline numbers in
+EXPERIMENTS.md are derived from compiled-HLO statistics with these constants
+(per the assignment):
+
+    peak bf16 compute : 197 TFLOP/s per chip
+    HBM bandwidth     : 819 GB/s per chip
+    ICI link bandwidth: ~50 GB/s per link
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+
+@dataclasses.dataclass(frozen=True)
+class TpuSpec:
+    name: str = "tpu-v5e"
+    peak_flops_bf16: float = 197e12        # FLOP/s per chip
+    hbm_bw: float = 819e9                  # bytes/s per chip
+    ici_bw_per_link: float = 50e9          # bytes/s per link
+    hbm_bytes: float = 16e9                # HBM capacity per chip
+    vmem_bytes: float = 128 * 2 ** 20      # ~128 MiB VMEM per core
+    mxu_dim: int = 128                     # systolic array tile
+
+
+V5E = TpuSpec()
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    """The three-term roofline for one (arch x shape x mesh) cell."""
+
+    cell: str
+    chips: int
+    hlo_flops: float
+    hlo_bytes: float
+    collective_bytes: float          # summed over all chips
+    model_flops: float               # 6*N*D (train) or 2*N_active*D (decode)
+    spec: TpuSpec = dataclasses.field(default_factory=lambda: V5E)
+
+    @property
+    def compute_s(self) -> float:
+        return self.hlo_flops / (self.chips * self.spec.peak_flops_bf16)
+
+    @property
+    def memory_s(self) -> float:
+        return self.hlo_bytes / (self.chips * self.spec.hbm_bw)
+
+    @property
+    def collective_s(self) -> float:
+        return self.collective_bytes / (self.chips * self.spec.ici_bw_per_link)
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time_s(self) -> float:
+        """Roofline step-time estimate = max of the three terms (perfect
+        overlap assumption; the sum would be the no-overlap bound)."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        """MODEL_FLOPS / HLO_FLOPs — fraction of compiled compute that is
+        'useful' (catches remat and redundancy waste).  Can exceed 1 only if
+        the compiler fused away work; values << 1 indicate recompute."""
+        return self.model_flops / self.hlo_flops if self.hlo_flops else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Achievable MFU under the roofline: useful FLOPs / (chips * peak *
+        step_time).  This is the score we hillclimb."""
+        denom = self.chips * self.spec.peak_flops_bf16 * self.step_time_s
+        return self.model_flops / denom if denom else 0.0
+
+    def as_dict(self) -> Dict:
+        return {
+            "cell": self.cell, "chips": self.chips,
+            "hlo_flops": self.hlo_flops, "hlo_bytes": self.hlo_bytes,
+            "collective_bytes": self.collective_bytes,
+            "model_flops": self.model_flops,
+            "compute_s": self.compute_s, "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "bottleneck": self.bottleneck,
+            "useful_flops_ratio": self.useful_flops_ratio,
+            "roofline_fraction": self.roofline_fraction,
+        }
+
+
+def dense_train_model_flops(n_params: float, tokens: float) -> float:
+    """6*N*D: fwd 2ND + bwd 4ND."""
+    return 6.0 * n_params * tokens
+
+
+def decode_model_flops(n_active_params: float, tokens: float) -> float:
+    """Forward-only decode: 2*N_active per generated token."""
+    return 2.0 * n_active_params * tokens

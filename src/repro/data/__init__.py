@@ -1,0 +1,2 @@
+"""Deterministic synthetic data pipeline."""
+from .pipeline import DataConfig, SyntheticPipeline, frontend_stub

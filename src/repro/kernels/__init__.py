@@ -1,0 +1,12 @@
+"""Pallas TPU kernels for the performance hot-spots, selected by STT plans.
+
+Modules:
+    stt_gemm         — GEMM templates (output/operand-stationary, reduction)
+    flash_attention  — blockwise online-softmax attention (GQA/causal/SWA)
+    ssd_scan         — Mamba-2 SSD chunked scan
+    ops              — jit'd public wrappers (+ padding, dtype policy, XLA path)
+    ref              — pure-jnp oracles (ground truth + CPU execution path)
+"""
+from . import flash_attention, ops, ref, ssd_scan, stt_gemm
+
+__all__ = ["flash_attention", "ops", "ref", "ssd_scan", "stt_gemm"]

@@ -1,0 +1,176 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the correctness ground truth (tests assert_allclose kernels against
+them) and double as the XLA execution path used by the model zoo when Pallas
+is unavailable (CPU dry-runs compile these; kernels are validated in
+interpret mode).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# GEMM
+# ---------------------------------------------------------------------------
+
+def matmul_ref(a: jax.Array, b: jax.Array,
+               out_dtype: Optional[jnp.dtype] = None) -> jax.Array:
+    """C[m, n] = sum_k A[m, k] B[k, n] with fp32 accumulation."""
+    out = jnp.dot(a, b, preferred_element_type=jnp.float32)
+    return out.astype(out_dtype or a.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention (GQA + causal + sliding window + cross)
+# ---------------------------------------------------------------------------
+
+def attention_mask(q_len: int, kv_len: int, *, causal: bool,
+                   window: Optional[int], q_offset: int = 0) -> jax.Array:
+    """Boolean (q_len, kv_len) mask; True = attend.
+
+    ``q_offset`` places the query block inside a longer sequence (used for
+    decode, where q_len == 1 at absolute position q_offset).
+    """
+    qpos = jnp.arange(q_len)[:, None] + q_offset
+    kpos = jnp.arange(kv_len)[None, :]
+    mask = jnp.ones((q_len, kv_len), dtype=bool)
+    if causal:
+        mask &= qpos >= kpos
+    if window is not None:
+        mask &= qpos - kpos < window
+    return mask
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  causal: bool = True, window: Optional[int] = None,
+                  q_offset: int = 0,
+                  ) -> jax.Array:
+    """Reference multi-head attention.
+
+    q: (B, Hq, Lq, D);  k, v: (B, Hkv, Lkv, D) with Hq % Hkv == 0 (GQA).
+    Softmax in fp32. ``causal=False, window=None`` gives cross-attention.
+    """
+    b, hq, lq, d = q.shape
+    hkv = k.shape[1]
+    group = hq // hkv
+    kg = jnp.repeat(k, group, axis=1)
+    vg = jnp.repeat(v, group, axis=1)
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                        kg.astype(jnp.float32)) / jnp.sqrt(d).astype(jnp.float32)
+    mask = attention_mask(lq, k.shape[2], causal=causal, window=window,
+                          q_offset=q_offset)
+    scores = jnp.where(mask[None, None], scores, -jnp.inf)
+    p = jax.nn.softmax(scores, axis=-1)
+    p = jnp.where(jnp.isnan(p), 0.0, p)   # fully-masked rows
+    out = jnp.einsum("bhqk,bhkd->bhqd", p, vg.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Mamba-2 SSD (state-space duality) — chunked linear recurrence
+# ---------------------------------------------------------------------------
+
+def ssd_ref(x: jax.Array, dt: jax.Array, a: jax.Array,
+            b: jax.Array, c: jax.Array,
+            h0: Optional[jax.Array] = None,
+            ) -> Tuple[jax.Array, jax.Array]:
+    """Sequential-scan oracle for the SSD recurrence.
+
+      h_t = exp(dt_t * a) * h_{t-1} + dt_t * B_t x_t^T
+      y_t = C_t . h_t
+
+    Shapes: x (B, L, H, P), dt (B, L, H), a (H,) [negative],
+            b, c (B, L, G, N) with H % G == 0; h0 (B, H, N, P) or None.
+    Returns (y (B, L, H, P), h_final (B, H, N, P)).  fp32 internally.
+    """
+    bsz, l, h, p = x.shape
+    g, n = b.shape[2], b.shape[3]
+    rep = h // g
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    bf = jnp.repeat(b.astype(jnp.float32), rep, axis=2)   # (B, L, H, N)
+    cf = jnp.repeat(c.astype(jnp.float32), rep, axis=2)
+    decay = jnp.exp(dtf * a.astype(jnp.float32))          # (B, L, H)
+
+    if h0 is None:
+        h0 = jnp.zeros((bsz, h, n, p), jnp.float32)
+
+    def step(hprev, inp):
+        xt, bt, ct, dct, dtt = inp                        # (B,H,P),(B,H,N)...
+        hnew = dct[..., None, None] * hprev + \
+            jnp.einsum("bhn,bhp->bhnp", dtt[..., None] * bt, xt)
+        yt = jnp.einsum("bhn,bhnp->bhp", ct, hnew)
+        return hnew, yt
+
+    xs = (jnp.moveaxis(xf, 1, 0), jnp.moveaxis(bf, 1, 0),
+          jnp.moveaxis(cf, 1, 0), jnp.moveaxis(decay, 1, 0),
+          jnp.moveaxis(dtf, 1, 0))
+    h_final, ys = jax.lax.scan(step, h0.astype(jnp.float32), xs)
+    y = jnp.moveaxis(ys, 0, 1).astype(x.dtype)
+    return y, h_final
+
+
+def ssd_chunked_ref(x: jax.Array, dt: jax.Array, a: jax.Array,
+                    b: jax.Array, c: jax.Array, chunk: int = 64,
+                    h0: Optional[jax.Array] = None,
+                    ) -> Tuple[jax.Array, jax.Array]:
+    """Chunked (quadratic-within-chunk) SSD — the algorithm the Pallas kernel
+    implements, in pure jnp.  Mathematically identical to ``ssd_ref``; also
+    the XLA path used by the models (vectorized over chunks via scan).
+    """
+    bsz, l, h, p = x.shape
+    g, n = b.shape[2], b.shape[3]
+    rep = h // g
+    assert l % chunk == 0, (l, chunk)
+    nc = l // chunk
+
+    xf = x.astype(jnp.float32) * dt.astype(jnp.float32)[..., None]  # dt folded
+    bf = jnp.repeat(b.astype(jnp.float32), rep, axis=2)
+    cf = jnp.repeat(c.astype(jnp.float32), rep, axis=2)
+    da = dt.astype(jnp.float32) * a.astype(jnp.float32)             # (B, L, H)
+
+    # reshape to chunks: (B, nc, Q, ...)
+    xc = xf.reshape(bsz, nc, chunk, h, p)
+    bc = bf.reshape(bsz, nc, chunk, h, n)
+    cc = cf.reshape(bsz, nc, chunk, h, n)
+    dac = da.reshape(bsz, nc, chunk, h)
+    lc = jnp.cumsum(dac, axis=2)                                    # (B,nc,Q,H)
+
+    # intra-chunk: y[i] = sum_{j<=i} exp(Lc[i]-Lc[j]) (C_i.B_j) xdt[j]
+    s = jnp.einsum("bcihn,bcjhn->bchij", cc, bc)
+    li = lc.transpose(0, 1, 3, 2)                  # (B, nc, H, Q)
+    dmat = li[..., :, None] - li[..., None, :]     # Lc[i] - Lc[j]
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+    # mask BEFORE exp: upper-triangular dmat is positive and would overflow
+    # in the backward pass (inf * 0 = NaN) if masked after
+    m = jnp.exp(jnp.where(tri[None, None, None], dmat, -1e9))
+    y_intra = jnp.einsum("bchij,bcjhp->bcihp", s * m, xc)
+
+    # chunk-level states: contribution of chunk tokens to its end state
+    wend = jnp.exp(lc[:, :, -1:, :] - lc)                           # (B,nc,Q,H)
+    chunk_state = jnp.einsum("bcjhn,bcjhp->bchnp", bc * wend[..., None], xc)
+    chunk_decay = jnp.exp(lc[:, :, -1, :])                          # (B,nc,H)
+
+    # scan over chunks to produce incoming state per chunk
+    if h0 is None:
+        h0 = jnp.zeros((bsz, h, n, p), jnp.float32)
+
+    def scan_fn(hprev, inp):
+        st, dec = inp                                # (B,H,N,P), (B,H)
+        hnew = dec[..., None, None] * hprev + st
+        return hnew, hprev
+
+    (h_final, h_in) = jax.lax.scan(
+        scan_fn, h0.astype(jnp.float32),
+        (jnp.moveaxis(chunk_state, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))
+    h_in = jnp.moveaxis(h_in, 0, 1)                  # (B,nc,H,N,P) pre-chunk
+
+    # inter-chunk: y[i] += C_i . (exp(Lc[i]) * h_in)
+    y_inter = jnp.einsum("bcihn,bchnp->bcihp",
+                         cc * jnp.exp(lc)[..., None], h_in)
+    y = (y_intra + y_inter).reshape(bsz, l, h, p).astype(x.dtype)
+    return y, h_final

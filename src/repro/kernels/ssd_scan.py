@@ -1,0 +1,88 @@
+"""Mamba-2 SSD (state-space duality) chunked-scan Pallas kernel.
+
+The SSD recurrence  h_t = exp(dt_t a) h_{t-1} + dt_t B_t x_t^T,
+y_t = C_t . h_t  is computed chunk-by-chunk: a quadratic (attention-like)
+intra-chunk term feeds the MXU, while the inter-chunk state is the
+*stationary* tensor of the dataflow — it lives in VMEM scratch across the
+sequential chunk axis.  This is the same STT story as the GEMM templates:
+the chunk axis is time, the state is rank-1 stationary (dp = 0, dt != 0).
+
+Inputs are pre-processed by ops.ssd: dt is folded into x (xdt = dt * x), the
+per-step log-decay da = dt * a is passed separately, and B/C are broadcast
+from groups to heads.  Shapes inside the kernel (per (batch*head, chunk)):
+
+    xdt (Q, P), b (Q, N), c (Q, N), da (Q,) -> y (Q, P), state (N, P)
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ssd_kernel(da_ref, x_ref, b_ref, c_ref, y_ref, state_ref, *, chunk: int):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    da = da_ref[0].astype(jnp.float32)            # (Q,)
+    x = x_ref[0].astype(jnp.float32)              # (Q, P) — dt already folded
+    b = b_ref[0].astype(jnp.float32)              # (Q, N)
+    c = c_ref[0].astype(jnp.float32)              # (Q, N)
+
+    lc = jnp.cumsum(da)                           # (Q,) inclusive log decay
+
+    # intra-chunk (quadratic, MXU): y[i] = sum_{j<=i} e^{lc_i-lc_j} (C_i.B_j) x_j
+    s = jnp.dot(c, b.T, preferred_element_type=jnp.float32)       # (Q, Q)
+    dmat = lc[:, None] - lc[None, :]
+    tri = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0) >= \
+        jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    m = jnp.exp(jnp.where(tri, dmat, -1e9))   # mask before exp (see ref.py)
+    y = jnp.dot(s * m, x, preferred_element_type=jnp.float32)     # (Q, P)
+
+    # inter-chunk: y[i] += C_i . (e^{lc_i} * h_in)
+    y += jnp.exp(lc)[:, None] * jnp.dot(c, state_ref[...],
+                                        preferred_element_type=jnp.float32)
+
+    # state update: h_out = e^{lc_Q} h_in + sum_j e^{lc_Q - lc_j} B_j x_j^T
+    w = jnp.exp(lc[-1] - lc)                      # (Q,)
+    state_ref[...] = jnp.exp(lc[-1]) * state_ref[...] + jnp.dot(
+        (b * w[:, None]).T, x, preferred_element_type=jnp.float32)
+
+    y_ref[0] = y.astype(y_ref.dtype)
+
+
+def ssd_scan(xdt: jax.Array, da: jax.Array, b: jax.Array, c: jax.Array, *,
+             chunk: int = 64, interpret: bool = False) -> jax.Array:
+    """Chunked SSD over flattened (batch*head) sequences.
+
+    xdt: (BH, L, P) with dt folded in;  da: (BH, L) log decays;
+    b, c: (BH, L, N) per-head (already group-broadcast).  Returns y (BH, L, P).
+    """
+    from jax.experimental.pallas import tpu as pltpu
+    bh, l, p = xdt.shape
+    n = b.shape[-1]
+    if l % chunk:
+        raise ValueError(f"L={l} not divisible by chunk={chunk}")
+    nc = l // chunk
+    kernel = functools.partial(_ssd_kernel, chunk=chunk)
+    return pl.pallas_call(
+        kernel,
+        grid=(bh, nc),
+        in_specs=[
+            pl.BlockSpec((1, chunk), lambda i, ci: (i, ci)),
+            pl.BlockSpec((1, chunk, p), lambda i, ci: (i, ci, 0)),
+            pl.BlockSpec((1, chunk, n), lambda i, ci: (i, ci, 0)),
+            pl.BlockSpec((1, chunk, n), lambda i, ci: (i, ci, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, p), lambda i, ci: (i, ci, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, l, p), xdt.dtype),
+        scratch_shapes=[pltpu.VMEM((n, p), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(da, xdt, b, c)

@@ -1,0 +1,184 @@
+"""STT-selected Pallas GEMM templates — the paper's PE templates on TPU.
+
+TensorLib's PE-internal modules (paper Fig. 3) map onto VMEM block residency
+choices (DESIGN.md §2, level 1).  One template per stationary choice:
+
+* ``output_stationary``  (paper (a)(a)(d), e.g. MNK-SST): the C block is the
+  VMEM-resident accumulator across the reduction grid axis; A/B blocks are
+  streamed by the Pallas pipeline (the software analogue of systolic
+  injection — deviation D1).
+
+* ``operand_stationary`` (paper (a)(c)(b), e.g. MNK-STS / MNK-TSS): the
+  chosen operand block stays resident while the *output* streams through,
+  read-modify-write accumulated in HBM via input/output aliasing — exactly
+  the WS-vs-OS traffic trade the paper's dataflows expose.
+
+* ``reduction_tree``     (paper (f)+tree, e.g. K-spatial dataflows): the
+  whole reduction axis is materialized in one block and reduced inside the
+  MXU pass — the combinational-adder-tree analogue.  Requires K blocks to
+  fit VMEM.
+
+All grids are (parallel..., arbitrary) with the revisited axis innermost, so
+the Mosaic pipeline double-buffers streamed operands (compute/DMA overlap).
+Block shapes default to the MXU-aligned 128 and are validated in
+``interpret=True`` mode on CPU (tests sweep shapes and dtypes).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+DEFAULT_BLOCK = 128
+
+
+def _validate(m, n, k, bm, bn, bk):
+    if m % bm or n % bn or k % bk:
+        raise ValueError(f"shape ({m},{n},{k}) not divisible by blocks "
+                         f"({bm},{bn},{bk}); ops.stt_matmul pads first")
+
+
+# ---------------------------------------------------------------------------
+# output-stationary (SST-class): C resident, A/B streamed, k innermost
+# ---------------------------------------------------------------------------
+
+def _os_kernel(a_ref, b_ref, o_ref, acc_ref, *, n_k: int, out_dtype):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+    acc_ref[...] += jnp.dot(a_ref[...], b_ref[...],
+                            preferred_element_type=jnp.float32)
+    @pl.when(pl.program_id(2) == n_k - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(out_dtype)
+
+
+def matmul_output_stationary(a: jax.Array, b: jax.Array, *,
+                             bm: int = DEFAULT_BLOCK, bn: int = DEFAULT_BLOCK,
+                             bk: int = DEFAULT_BLOCK,
+                             out_dtype=None, interpret: bool = False
+                             ) -> jax.Array:
+    from jax.experimental.pallas import tpu as pltpu
+    (m, k), (_, n) = a.shape, b.shape
+    _validate(m, n, k, bm, bn, bk)
+    out_dtype = out_dtype or a.dtype
+    n_k = k // bk
+    kernel = functools.partial(_os_kernel, n_k=n_k, out_dtype=out_dtype)
+    return pl.pallas_call(
+        kernel,
+        grid=(m // bm, n // bn, n_k),
+        in_specs=[pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+                  pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j))],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(a, b)
+
+
+# ---------------------------------------------------------------------------
+# operand-stationary (STS/TSS-class): operand resident, C strip accumulator
+# ---------------------------------------------------------------------------
+# On TPU there is no inter-PE wire to stream partial sums through (deviation
+# D1), so the streamed-output systolic module (b) becomes a VMEM *strip*
+# accumulator: while the stationary operand block is pinned, the entire
+# output strip it contributes to lives in VMEM and the other operand streams
+# past it.  VMEM bound: strip_len * block * 4B (checked).
+
+def _ws_kernel(a_ref, b_ref, o_ref, acc_ref, *, n_k: int, bm: int,
+               out_dtype):
+    kk, i = pl.program_id(1), pl.program_id(2)
+    sl = pl.ds(i * bm, bm)
+    @pl.when(kk == 0)
+    def _init():
+        acc_ref[sl, :] = jnp.zeros_like(acc_ref[sl, :])
+    acc_ref[sl, :] += jnp.dot(a_ref[...], b_ref[...],
+                              preferred_element_type=jnp.float32)
+    @pl.when(kk == n_k - 1)
+    def _flush():
+        o_ref[...] = acc_ref[sl, :].astype(out_dtype)
+
+
+def matmul_operand_stationary(a: jax.Array, b: jax.Array, *,
+                              stationary: str = "B",
+                              bm: int = DEFAULT_BLOCK, bn: int = DEFAULT_BLOCK,
+                              bk: int = DEFAULT_BLOCK,
+                              out_dtype=None, interpret: bool = False
+                              ) -> jax.Array:
+    """``stationary='B'``: grid (n, k, m) keeps the B block pinned while A
+    streams (weight-stationary);  ``stationary='A'`` is the symmetric
+    input-stationary template (implemented by transposition symmetry:
+    C^T = B^T A^T with B^T stationary)."""
+    from jax.experimental.pallas import tpu as pltpu
+    if stationary == "A":
+        return matmul_operand_stationary(
+            b.T, a.T, stationary="B", bm=bn, bn=bm, bk=bk,
+            out_dtype=out_dtype, interpret=interpret).T
+    if stationary != "B":
+        raise ValueError(stationary)
+    (m, k), (_, n) = a.shape, b.shape
+    _validate(m, n, k, bm, bn, bk)
+    out_dtype = out_dtype or a.dtype
+    n_k = k // bk
+    kernel = functools.partial(_ws_kernel, n_k=n_k, bm=bm,
+                               out_dtype=out_dtype)
+    return pl.pallas_call(
+        kernel,
+        grid=(n // bn, n_k, m // bm),
+        in_specs=[pl.BlockSpec((bm, bk), lambda j, kk, i: (i, kk)),
+                  # B block constant along the inner m axis -> VMEM-resident
+                  pl.BlockSpec((bk, bn), lambda j, kk, i: (kk, j))],
+        out_specs=pl.BlockSpec((bm, bn), lambda j, kk, i: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        scratch_shapes=[pltpu.VMEM((m, bn), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary", "arbitrary")),
+        interpret=interpret,
+    )(a, b)
+
+
+# ---------------------------------------------------------------------------
+# reduction-tree (K-spatial class): full-K blocks, single MXU reduction
+# ---------------------------------------------------------------------------
+
+def _rt_kernel(a_ref, b_ref, o_ref, *, out_dtype):
+    o_ref[...] = jnp.dot(a_ref[...], b_ref[...],
+                         preferred_element_type=jnp.float32).astype(out_dtype)
+
+
+def matmul_reduction_tree(a: jax.Array, b: jax.Array, *,
+                          bm: int = DEFAULT_BLOCK, bn: int = DEFAULT_BLOCK,
+                          out_dtype=None, interpret: bool = False
+                          ) -> jax.Array:
+    from jax.experimental.pallas import tpu as pltpu
+    (m, k), (_, n) = a.shape, b.shape
+    _validate(m, n, k, bm, bn, k)
+    out_dtype = out_dtype or a.dtype
+    kernel = functools.partial(_rt_kernel, out_dtype=out_dtype)
+    return pl.pallas_call(
+        kernel,
+        grid=(m // bm, n // bn),
+        in_specs=[pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+                  pl.BlockSpec((k, bn), lambda i, j: (0, j))],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel")),
+        interpret=interpret,
+    )(a, b)
+
+
+TEMPLATES = {
+    "output_stationary": matmul_output_stationary,
+    "operand_stationary": matmul_operand_stationary,
+    "reduction_tree": matmul_reduction_tree,
+    # 'streaming' (all-unicast) has no reuse to exploit: realize as
+    # reduction-tree (single pass, no residency) — documented equivalence.
+    "streaming": matmul_reduction_tree,
+}

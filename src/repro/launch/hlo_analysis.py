@@ -1,0 +1,301 @@
+"""Post-optimization HLO analyzer: per-device FLOPs, HBM traffic, and
+collective wire bytes — with while-loop trip scaling.
+
+This is the dry-run "profiler" (no real TPU): ``compiled.cost_analysis()``
+counts while bodies ONCE, which under-reports scan-over-layers models by a
+factor of n_layers, so we parse ``compiled.as_text()`` ourselves:
+
+  * every computation gets a multiplier = product of enclosing while trip
+    counts (trip parsed from the loop-condition constants) and fusion
+    call edges,
+  * FLOPs: 2 * |lhs| * |rhs_free| per dot (operand shapes from the symbol
+    table; elementwise flops are ignored — dots dominate at these scales),
+  * HBM bytes: sum of operand+result bytes over *top-level* ops of
+    non-fusion computations (fusion internals are on-chip), with
+    dynamic-(update-)slice charged only their slice bytes,
+  * wire bytes per chip, by collective kind with replica-group size g:
+      all-gather         result * (g-1)/g
+      all-reduce     2 * result * (g-1)/g      (ring = RS + AG)
+      reduce-scatter     result * (g-1)        (operand ~= result * g)
+      all-to-all         result * (g-1)/g
+      collective-permute result
+
+Shapes in SPMD-partitioned HLO are per-device, so all outputs here are
+per-device numbers.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import re
+from collections import defaultdict
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(
+    r"(pred|s8|u8|s16|u16|f16|bf16|s32|u32|f32|s64|u64|f64|c64|c128|"
+    r"f8e4m3fn|f8e5m2)\[([0-9,]*)\]")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(.*?)\s+([\w\-]+)\((.*)$")
+_COMP_RE = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s+\(.*\)\s*->.*\{\s*$")
+_GROUPS_V1 = re.compile(r"replica_groups=\{\{([0-9,]+)\}")
+_GROUPS_V2 = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=")
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_NO_TRAFFIC = {"parameter", "constant", "tuple", "get-tuple-element",
+               "bitcast", "after-all", "iota", "partition-id", "replica-id",
+               "while", "conditional", "call", "custom-call", "rng",
+               "get-dimension-size", "domain", "opt-barrier",
+               "all-gather-start", "all-reduce-start", "copy-start",
+               "copy-done", "all-gather-done", "all-reduce-done"}
+
+
+def shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def shape_dims(shape_str: str) -> Optional[Tuple[str, List[int]]]:
+    m = _SHAPE_RE.search(shape_str)
+    if not m:
+        return None
+    dims = [int(d) for d in m.group(2).split(",")] if m.group(2) else []
+    return m.group(1), dims
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    shape: str
+    kind: str
+    rest: str          # args + attributes
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    is_entry: bool
+    ops: List[Op]
+
+
+@dataclasses.dataclass
+class HloStats:
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    wire_bytes: float = 0.0
+    collective_counts: Dict[str, int] = dataclasses.field(
+        default_factory=dict)
+    wire_by_kind: Dict[str, float] = dataclasses.field(default_factory=dict)
+    dot_flops_by_name: Dict[str, float] = dataclasses.field(
+        default_factory=dict)
+    trip_counts: Dict[str, int] = dataclasses.field(default_factory=dict)
+
+    def as_dict(self) -> Dict:
+        return {"flops": self.flops, "hbm_bytes": self.hbm_bytes,
+                "wire_bytes": self.wire_bytes,
+                "collective_counts": dict(self.collective_counts),
+                "wire_by_kind": dict(self.wire_by_kind)}
+
+
+def parse_computations(text: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    current: Optional[Computation] = None
+    for line in text.splitlines():
+        if current is None:
+            m = _COMP_RE.match(line)
+            if m:
+                current = Computation(m.group(2), bool(m.group(1)), [])
+            continue
+        if line.startswith("}"):
+            comps[current.name] = current
+            current = None
+            continue
+        m = _OP_RE.match(line)
+        if m:
+            current.ops.append(Op(m.group(1), m.group(2), m.group(3),
+                                  m.group(4)))
+    return comps
+
+
+def _operand_names(rest: str) -> List[str]:
+    """Names inside the top-level call parens of the op line."""
+    depth, out, cur = 0, [], ""
+    for ch in rest:
+        if ch == ")" and depth == 0:
+            out.append(cur)
+            break
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+        cur += ch
+    args = out[0] if out else rest
+    return re.findall(r"%([\w\.\-]+)", args)
+
+
+def _group_size(rest: str, default: int) -> int:
+    m = _GROUPS_V2.search(rest)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_V1.search(rest)
+    if m:
+        return len(m.group(1).split(","))
+    return default
+
+
+def _trip_count(comp: Computation) -> int:
+    """Max integer constant in a loop-condition computation (heuristic —
+    scan conditions compare the induction variable against the trip count)."""
+    best = 1
+    for op in comp.ops:
+        if op.kind == "constant":
+            m = re.search(r"constant\((\d+)\)", op.shape + " " + op.kind +
+                          "(" + op.rest)
+            if m:
+                best = max(best, int(m.group(1)))
+    return best
+
+
+def _multipliers(comps: Dict[str, Computation]) -> Dict[str, float]:
+    """Computation name -> product of enclosing trip counts."""
+    entry = next((c.name for c in comps.values() if c.is_entry), None)
+    mult: Dict[str, float] = defaultdict(float)
+    edges: Dict[str, List[Tuple[str, float]]] = defaultdict(list)
+    for comp in comps.values():
+        for op in comp.ops:
+            if op.kind == "while":
+                mc = re.search(r"condition=%?([\w\.\-]+)", op.rest)
+                mb = re.search(r"body=%?([\w\.\-]+)", op.rest)
+                if mb and mc and mc.group(1) in comps:
+                    trip = _trip_count(comps[mc.group(1)])
+                    edges[comp.name].append((mb.group(1), float(trip)))
+                    edges[comp.name].append((mc.group(1), float(trip)))
+            else:
+                for attr in ("calls", "to_apply"):
+                    m = re.search(attr + r"=%?([\w\.\-]+)", op.rest)
+                    if m and m.group(1) in comps:
+                        edges[comp.name].append((m.group(1), 1.0))
+    if entry is None:
+        return {name: 1.0 for name in comps}
+    mult[entry] = 1.0
+    stack = [entry]
+    while stack:
+        cur = stack.pop()
+        for child, factor in edges.get(cur, ()):
+            new = mult[cur] * factor
+            if new > mult[child]:
+                mult[child] = new
+                stack.append(child)
+    return dict(mult)
+
+
+def _dot_flops(op: Op, table: Dict[str, str]) -> float:
+    names = _operand_names(op.rest)
+    if len(names) < 2:
+        return 0.0
+    lhs, rhs = table.get(names[0]), table.get(names[1])
+    if lhs is None or rhs is None:
+        return 0.0
+    ld = shape_dims(lhs)
+    rd = shape_dims(rhs)
+    if ld is None or rd is None:
+        return 0.0
+    rdims = rd[1]
+    rc = re.search(r"rhs_contracting_dims=\{([0-9,]*)\}", op.rest)
+    rb = re.search(r"rhs_batch_dims=\{([0-9,]*)\}", op.rest)
+    used = set()
+    for m in (rc, rb):
+        if m and m.group(1):
+            used.update(int(i) for i in m.group(1).split(","))
+    rhs_free = 1
+    for i, d in enumerate(rdims):
+        if i not in used:
+            rhs_free *= d
+    lhs_total = math.prod(ld[1]) if ld[1] else 1
+    return 2.0 * lhs_total * rhs_free
+
+
+_WIRE_FACTOR = {
+    "all-gather": lambda b, g: b * (g - 1) / g,
+    "all-reduce": lambda b, g: 2.0 * b * (g - 1) / g,
+    "reduce-scatter": lambda b, g: b * (g - 1),
+    "all-to-all": lambda b, g: b * (g - 1) / g,
+    "collective-permute": lambda b, g: float(b),
+}
+
+
+def analyze(text: str, default_group: int = 1) -> HloStats:
+    comps = parse_computations(text)
+    mult = _multipliers(comps)
+    fusion_comps = set()
+    for comp in comps.values():
+        for op in comp.ops:
+            m = re.search(r"calls=%?([\w\.\-]+)", op.rest)
+            if m:
+                fusion_comps.add(m.group(1))
+            m = re.search(r"to_apply=%?([\w\.\-]+)", op.rest)
+            if m:
+                fusion_comps.add(m.group(1))
+
+    stats = HloStats()
+    counts: Dict[str, int] = defaultdict(int)
+    wire: Dict[str, float] = defaultdict(float)
+
+    for comp in comps.values():
+        k = mult.get(comp.name, 0.0)
+        if k == 0.0:
+            continue
+        table = {op.name: op.shape for op in comp.ops}
+        for op in comp.ops:
+            if op.kind == "dot":
+                f = _dot_flops(op, table) * k
+                stats.flops += f
+                stats.dot_flops_by_name[f"{comp.name}/{op.name}"] = f
+            if op.kind in _WIRE_FACTOR:
+                g = _group_size(op.rest, default_group)
+                b = shape_bytes(op.shape)
+                w = _WIRE_FACTOR[op.kind](b, max(g, 1)) * k
+                stats.wire_bytes += w
+                counts[op.kind] += int(k) if k >= 1 else 1
+                wire[op.kind] += w
+            # HBM traffic: only top-level ops of non-fusion computations
+            if comp.name in fusion_comps:
+                continue
+            if op.kind in _NO_TRAFFIC:
+                continue
+            res = shape_bytes(op.shape)
+            if op.kind == "dynamic-slice":
+                stats.hbm_bytes += 2 * res * k
+            elif op.kind == "dynamic-update-slice":
+                names = _operand_names(op.rest)
+                upd = shape_bytes(table.get(names[1], "")) if len(names) > 1 \
+                    else 0
+                stats.hbm_bytes += 2 * upd * k
+            else:
+                names = _operand_names(op.rest)
+                opnd = sum(shape_bytes(table.get(n, "")) for n in names)
+                stats.hbm_bytes += (res + opnd) * k
+
+    # record trip counts for debugging / EXPERIMENTS.md
+    for comp in comps.values():
+        for op in comp.ops:
+            if op.kind == "while":
+                mc = re.search(r"condition=%?([\w\.\-]+)", op.rest)
+                if mc and mc.group(1) in comps:
+                    stats.trip_counts[op.name] = _trip_count(comps[mc.group(1)])
+    stats.collective_counts = dict(counts)
+    stats.wire_by_kind = dict(wire)
+    return stats

@@ -1,0 +1,255 @@
+"""Cell specifications: (arch x input-shape x mesh) -> lowerable closure.
+
+``input_specs`` returns weak-type-correct ShapeDtypeStruct stand-ins for
+every model input (no device allocation), plus the in/out shardings the
+cell lowers with:
+
+  * train cells lower ``train_step`` (loss + grads + AdamW update, donated),
+  * prefill cells lower ``prefill``  (forward + KV-cache build),
+  * decode cells lower ``decode_step`` (one token against a seq_len cache).
+
+Serving cells use bf16 parameters (no optimizer); training uses fp32
+masters + AdamW state (8-bit for grok-1-314b so it fits v5e HBM).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..configs import SHAPES, InputShape, ModelConfig, cells_for, get_config
+from ..models import common, decode as dec, transformer
+from ..models.ssm import conv_dim
+from ..models.transformer import hybrid_groups
+from ..optim import adamw
+from ..train import trainer
+
+
+def opt_config_for(cfg: ModelConfig) -> adamw.AdamWConfig:
+    """8-bit optimizer state where fp32 moments would not fit HBM."""
+    bits = 8 if cfg.param_count() > 200e9 else 32
+    return adamw.AdamWConfig(total_steps=10_000, state_bits=bits)
+
+
+# ---------------------------------------------------------------------------
+# shape/sharding helpers
+# ---------------------------------------------------------------------------
+
+def _batch_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def _fit(spec_axes, shape, mesh: Mesh) -> P:
+    """PartitionSpec with divisibility fallback (axis -> None)."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    out = []
+    for dim, ax in zip(shape, spec_axes):
+        if ax is None:
+            out.append(None)
+            continue
+        size = 1
+        for a in ((ax,) if isinstance(ax, str) else ax):
+            size *= sizes[a]
+        out.append(ax if dim % size == 0 else None)
+    return P(*out)
+
+
+def _sds(shape, dtype) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype))
+
+
+def params_struct(cfg: ModelConfig, dtype=None) -> Tuple[Any, Any]:
+    """(ShapeDtypeStruct params tree, logical-axes tree) — no allocation."""
+    out = jax.eval_shape(
+        lambda k: common.split(transformer.init_params(k, cfg)),
+        jax.random.PRNGKey(0))
+    params, axes = out
+    if dtype is not None:
+        params = jax.tree.map(lambda s: _sds(s.shape, dtype), params)
+    return params, axes
+
+
+def param_shardings(params, axes, cfg: ModelConfig, mesh: Mesh,
+                    rules: common.AxisRules = common.DEFAULT_RULES):
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    specs = rules.specs(axes, params, sizes)
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def cache_struct(cfg: ModelConfig, batch: int, seq_len: int) -> Dict:
+    """Decode-cache ShapeDtypeStructs (mirrors models.decode.init_cache)."""
+    L = cfg.n_layers
+    s_c = seq_len if cfg.swa_window is None else min(seq_len, cfg.swa_window)
+    kvd = cfg.kv_dim
+
+    def kv(n, s):
+        return {"k": _sds((n, batch, s, kvd), jnp.bfloat16),
+                "v": _sds((n, batch, s, kvd), jnp.bfloat16)}
+
+    cache: Dict[str, Any] = {"pos": _sds((), jnp.int32)}
+    if cfg.family in ("dense", "moe", "encdec", "vlm"):
+        cache["self"] = kv(L, s_c)
+    if cfg.family in ("ssm", "hybrid"):
+        cache["ssm"] = {
+            "conv": _sds((L, batch, cfg.conv_kernel - 1, conv_dim(cfg)),
+                         jnp.float32),
+            "state": _sds((L, batch, cfg.ssm_heads, cfg.ssm_state,
+                           cfg.ssm_head_dim), jnp.float32),
+        }
+    if cfg.family == "hybrid":
+        n_apps, _, _ = hybrid_groups(cfg)
+        cache["shared"] = kv(n_apps, s_c)
+    if cfg.family == "encdec":
+        cache["cross"] = kv(L, cfg.frontend_tokens)
+    if cfg.family == "vlm":
+        cache["cross"] = kv(cfg.n_layers // cfg.cross_attn_every,
+                            cfg.frontend_tokens)
+    return cache
+
+
+def cache_shardings(cache, cfg: ModelConfig, mesh: Mesh):
+    """Path-keyed shardings: batch over (pod, data), feature over model."""
+    b_ax = _batch_axes(mesh)
+
+    def spec(path, leaf):
+        keys = [str(getattr(p, "key", "")) for p in path]
+        if "pos" in keys:
+            return P()
+        if "state" in keys:                    # (L, B, H, N, P)
+            return _fit((None, b_ax, "model", None, None), leaf.shape, mesh)
+        if "conv" in keys:                     # (L, B, k-1, cd)
+            return _fit((None, b_ax, None, "model"), leaf.shape, mesh)
+        # kv caches (N, B, S, kvd)
+        return _fit((None, b_ax, None, "model"), leaf.shape, mesh)
+
+    return jax.tree_util.tree_map_with_path(
+        lambda p, l: NamedSharding(mesh, spec(p, l)), cache)
+
+
+# ---------------------------------------------------------------------------
+# cells
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class Cell:
+    arch: str
+    shape: InputShape
+    kind: str
+    fn: Callable                   # to be jit'd
+    args: Tuple                    # ShapeDtypeStructs
+    in_shardings: Tuple
+    out_shardings: Any
+    donate: Tuple[int, ...]
+    model_flops: float             # 6ND / 2ND per the assignment formulas
+    tokens: float
+
+
+def input_specs(arch: str, shape_name: str, mesh: Mesh,
+                overrides: Optional[Dict] = None) -> Cell:
+    """Build the lowerable cell for (arch x shape x mesh).
+
+    ``overrides``: ModelConfig field overrides — the perf-iteration loop
+    (EXPERIMENTS.md §Perf) sweeps remat / sequence_parallel / attention
+    block knobs through here."""
+    cfg = get_config(arch)
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    shape = SHAPES[shape_name]
+    if shape_name not in cells_for(cfg):
+        raise ValueError(f"{arch} skips {shape_name} (full attention; see "
+                         "DESIGN.md §Arch-applicability)")
+    b_ax = _batch_axes(mesh)
+    B, S = shape.global_batch, shape.seq_len
+    needs_frontend = cfg.family in ("encdec", "vlm")
+    n_active = cfg.active_param_count()
+
+    if shape.kind == "train":
+        opt_cfg = opt_config_for(cfg)
+        state, axes = jax.eval_shape(
+            lambda k: trainer.init_state(k, cfg, opt_cfg),
+            jax.random.PRNGKey(0))
+        st_sh = trainer.state_shardings(state, axes, mesh)
+        batch = {"tokens": _sds((B, S), jnp.int32),
+                 "targets": _sds((B, S), jnp.int32)}
+        b_sh = {k: NamedSharding(mesh, _fit((b_ax, None), (B, S), mesh))
+                for k in batch}
+        if needs_frontend:
+            fshape = (B, cfg.frontend_tokens, cfg.d_model)
+            batch["frontend"] = _sds(fshape, jnp.float32)
+            b_sh["frontend"] = NamedSharding(
+                mesh, _fit((b_ax, None, None), fshape, mesh))
+        step = trainer.make_train_step(cfg, opt_cfg)
+        tokens = float(B) * S
+        return Cell(arch, shape, "train", step, (state, batch),
+                    (st_sh, b_sh), (st_sh, None), (0,),
+                    model_flops=6.0 * n_active * tokens, tokens=tokens)
+
+    # serving cells: bf16 params
+    params, axes = params_struct(cfg, dtype=jnp.bfloat16)
+    p_sh = param_shardings(params, axes, cfg, mesh)
+
+    if shape.kind == "prefill":
+        toks = _sds((B, S), jnp.int32)
+        t_sh = NamedSharding(mesh, _fit((b_ax, None), (B, S), mesh))
+        args = [params, toks]
+        in_sh = [p_sh, t_sh]
+
+        if needs_frontend:
+            fshape = (B, cfg.frontend_tokens, cfg.d_model)
+            args.append(_sds(fshape, jnp.float32))
+            in_sh.append(NamedSharding(
+                mesh, _fit((b_ax, None, None), fshape, mesh)))
+
+            def fn(p, t, f):
+                return dec.prefill(p, t, cfg, frontend=f, max_len=S)
+        else:
+            def fn(p, t):
+                return dec.prefill(p, t, cfg, max_len=S)
+
+        # output: (last logits, cache)
+        out_cache = jax.eval_shape(fn, *args)[1]
+        logits_sh = NamedSharding(
+            mesh, _fit((b_ax, "model"), (B, cfg.vocab), mesh))
+        c_sh = cache_shardings(out_cache, cfg, mesh)
+        tokens = float(B) * S
+        return Cell(arch, shape, "prefill", fn, tuple(args), tuple(in_sh),
+                    (logits_sh, c_sh), (), 2.0 * n_active * tokens, tokens)
+
+    # decode
+    cache = cache_struct(cfg, B, S)
+    c_sh = cache_shardings(cache, cfg, mesh)
+    toks = _sds((B, 1), jnp.int32)
+    t_sh = NamedSharding(mesh, _fit((b_ax, None), (B, 1), mesh))
+
+    def fn(p, t, c):
+        return dec.decode_step(p, t, c, cfg)
+
+    logits_sh = NamedSharding(
+        mesh, _fit((b_ax, "model"), (B, cfg.vocab), mesh))
+    tokens = float(B)
+    return Cell(arch, shape, "decode", fn, (params, toks, cache),
+                (p_sh, t_sh, c_sh), (logits_sh, c_sh), (2,),
+                2.0 * n_active * tokens, tokens)
+
+
+def all_cells(mesh_name: str = "single"):
+    """Iterate every runnable (arch x shape) pair; yields (arch, shape_name)."""
+    from ..configs import ARCH_IDS
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        for shape_name in cells_for(cfg):
+            yield arch, shape_name
+
+
+def skipped_cells():
+    from ..configs import ARCH_IDS
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        for shape_name in SHAPES:
+            if shape_name not in cells_for(cfg):
+                yield arch, shape_name, "full attention; long_500k skipped"

@@ -1,0 +1,9 @@
+"""Model zoo: all architecture families, built from shared blocks."""
+from . import attention, common, decode, mlp, ssm, transformer
+from .common import AxisRules, DEFAULT_RULES, Leaf, cross_entropy, split
+from .decode import decode_step, init_cache, prefill
+from .transformer import forward, init_params
+
+__all__ = ["attention", "common", "decode", "mlp", "ssm", "transformer",
+           "AxisRules", "DEFAULT_RULES", "Leaf", "cross_entropy", "split",
+           "decode_step", "init_cache", "prefill", "forward", "init_params"]

@@ -1,0 +1,156 @@
+"""Mamba-2 (SSD) block: projections + causal conv + chunked SSD + gate.
+
+Training/prefill use the chunked SSD (kernels/ref.ssd_chunked_ref — the XLA
+twin of the Pallas kernel); decode keeps an O(1) recurrent state
+(B, H, N, P) plus a rolling conv window, which is what makes the 524k-token
+decode cell run (sub-quadratic; see configs.base.sub_quadratic).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..kernels.ref import ssd_chunked_ref
+from .common import Leaf, shard, stacked_dense_init
+
+
+def conv_dim(cfg: ModelConfig) -> int:
+    return cfg.d_inner + 2 * cfg.ssm_groups * cfg.ssm_state
+
+
+def init_ssm(key, cfg: ModelConfig, n_layers: int) -> Dict:
+    ks = jax.random.split(key, 5)
+    d, di, h = cfg.d_model, cfg.d_inner, cfg.ssm_heads
+    g, n = cfg.ssm_groups, cfg.ssm_state
+    cd = conv_dim(cfg)
+    # in_proj emits [z (di) | x (di) | B (g n) | C (g n) | dt (h)]
+    out_dim = 2 * di + 2 * g * n + h
+    p = {
+        "in_proj": stacked_dense_init(ks[0], n_layers, d, out_dim,
+                                      ("embed", "ssm_inner")),
+        "conv_w": Leaf(0.1 * jax.random.normal(
+            ks[1], (n_layers, cfg.conv_kernel, cd), jnp.float32),
+            ("layers", None, "ssm_inner")),
+        "conv_b": Leaf(jnp.zeros((n_layers, cd), jnp.float32),
+                       ("layers", "ssm_inner")),
+        "a_log": Leaf(jnp.log(jnp.broadcast_to(
+            jnp.linspace(1.0, 16.0, h), (n_layers, h))),
+            ("layers", None)),
+        "d_skip": Leaf(jnp.ones((n_layers, h), jnp.float32),
+                       ("layers", None)),
+        "dt_bias": Leaf(jnp.zeros((n_layers, h), jnp.float32),
+                        ("layers", None)),
+        "norm_g": Leaf(jnp.ones((n_layers, di), jnp.float32),
+                       ("layers", "ssm_inner")),
+        "out_proj": stacked_dense_init(ks[2], n_layers, di, d,
+                                       ("ssm_inner", "embed")),
+    }
+    return p
+
+
+def _split_proj(proj: jax.Array, cfg: ModelConfig):
+    di, g, n, h = cfg.d_inner, cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads
+    z = proj[..., :di]
+    xbc = proj[..., di:di + di + 2 * g * n]
+    dt = proj[..., di + di + 2 * g * n:]
+    return z, xbc, dt
+
+
+def _gated_norm(y: jax.Array, z: jax.Array, gamma: jax.Array,
+                eps: float) -> jax.Array:
+    yf = y.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))
+    var = jnp.mean(yf * yf, axis=-1, keepdims=True)
+    return yf * jax.lax.rsqrt(var + eps) * gamma
+
+
+def apply_ssm(p: Dict, x: jax.Array, cfg: ModelConfig, *,
+              cache: Optional[Dict[str, jax.Array]] = None,
+              collect_cache: bool = False,
+              ) -> Tuple[jax.Array, Optional[Dict[str, jax.Array]]]:
+    """x: (B, L, D).  With ``cache`` (decode): L == 1 and the recurrence
+    advances one step.  ``collect_cache`` (prefill) returns the decode cache
+    (rolling conv window + final SSD state).  Returns (out, new_cache)."""
+    b, l, d = x.shape
+    di, g, n, h = cfg.d_inner, cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads
+    ph = cfg.ssm_head_dim
+    compute = jnp.dtype(cfg.dtype)
+
+    xg = x.astype(compute)
+    gathered = None
+    if cfg.explicit_collectives:
+        from .explicit_tp import gather_seq
+        gathered = gather_seq(xg)
+    xg = gathered if gathered is not None else shard(
+        xg, ("pod", "data"), None, None)                        # SP gather
+    proj = (xg @ p["in_proj"].astype(compute)).astype(jnp.float32)
+    z, xbc, dt = _split_proj(proj, cfg)
+    dt = jax.nn.softplus(dt + p["dt_bias"])                    # (B, L, H)
+    a = -jnp.exp(p["a_log"])                                   # (H,)
+
+    kconv = cfg.conv_kernel
+    new_cache = None
+    if cache is None:
+        # pad L to a chunk multiple; padded steps get dt = 0 so they neither
+        # move the state (decay = exp(0) = 1) nor contribute (dt*B*x = 0)
+        chunk = min(cfg.ssm_chunk, l)
+        lp = -(-l // chunk) * chunk
+        if lp != l:
+            xbc_c = jnp.pad(xbc, ((0, 0), (0, lp - l), (0, 0)))
+            dt = jnp.pad(dt, ((0, 0), (0, lp - l), (0, 0)))
+        else:
+            xbc_c = xbc
+        # causal depthwise conv over (x|B|C) channels
+        pad = jnp.pad(xbc_c, ((0, 0), (kconv - 1, 0), (0, 0)))
+        conv = sum(pad[:, i:i + lp] * p["conv_w"][i] for i in range(kconv))
+        conv = jax.nn.silu(conv + p["conv_b"])
+        xs = conv[..., :di].reshape(b, lp, h, ph)
+        bs = conv[..., di:di + g * n].reshape(b, lp, g, n)
+        cs = conv[..., di + g * n:].reshape(b, lp, g, n)
+        # pin SSD head sharding: the quadratic (B, nc, H, Q, Q) intra-chunk
+        # tensors must stay H-sharded over the model axis
+        xs = shard(xs, ("pod", "data"), None, "model", None)
+        dt = shard(dt, ("pod", "data"), None, "model")
+        y, h_fin = ssd_chunked_ref(xs, dt, a, bs, cs, chunk=chunk)
+        y, xs = y[:, :l], xs[:, :l]
+        if collect_cache:
+            new_cache = {"conv": xbc[:, l - (kconv - 1):].astype(jnp.float32),
+                         "state": h_fin}
+    else:
+        # decode: rolling conv window (B, k-1, cd) + state (B, H, N, P)
+        win = jnp.concatenate([cache["conv"], xbc], axis=1)    # (B, k, cd)
+        conv = sum(win[:, i:i + 1] * p["conv_w"][i] for i in range(kconv))
+        conv = jax.nn.silu(conv + p["conv_b"])                 # (B, 1, cd)
+        xs = conv[..., :di].reshape(b, h, ph)
+        bs = conv[..., di:di + g * n].reshape(b, g, n)
+        cs = conv[..., di + g * n:].reshape(b, g, n)
+        rep = h // g
+        bh = jnp.repeat(bs, rep, axis=1)                       # (B, H, N)
+        ch = jnp.repeat(cs, rep, axis=1)
+        dt1 = dt[:, 0]                                         # (B, H)
+        decay = jnp.exp(dt1 * a)                               # (B, H)
+        h_new = decay[..., None, None] * cache["state"] + jnp.einsum(
+            "bhn,bhp->bhnp", dt1[..., None] * bh, xs)
+        y = jnp.einsum("bhn,bhnp->bhp", ch, h_new)[:, None]    # (B, 1, H, P)
+        new_cache = {"conv": win[:, 1:], "state": h_new}
+        xs = xs[:, None]                                       # for D skip
+
+    y = y + p["d_skip"][:, None] * xs                          # D skip conn
+    y = y.reshape(b, l, di)
+    y = _gated_norm(y, z, p["norm_g"], cfg.norm_eps).astype(compute)
+    y = shard(y, ("pod", "data"), None, "model")
+    out = (y @ p["out_proj"].astype(compute)).astype(x.dtype)
+    if cfg.sequence_parallel:
+        out = shard(out, ("pod", "data"), "model", None)   # TP -> SP
+    return out, new_cache
+
+
+def make_ssm_cache(cfg: ModelConfig, batch: int,
+                   dtype=jnp.float32) -> Dict[str, jax.Array]:
+    return {
+        "conv": jnp.zeros((batch, cfg.conv_kernel - 1, conv_dim(cfg)), dtype),
+        "state": jnp.zeros((batch, cfg.ssm_heads, cfg.ssm_state,
+                            cfg.ssm_head_dim), dtype),
+    }

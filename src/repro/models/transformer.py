@@ -1,0 +1,316 @@
+"""Model assembly for all architecture families + the public forward pass.
+
+Families:
+    dense / moe — decoder-only, scan over uniform layers
+    ssm         — Mamba-2 stack (attention-free)
+    hybrid      — Mamba-2 backbone + ONE shared attn+MLP block applied every
+                  ``attn_every`` layers (Zamba2-style parameter sharing);
+                  implemented as grouped scans so each shared application
+                  gets its own KV cache entry
+    encdec      — whisper-style: bidirectional encoder over stub frames +
+                  causal decoder with per-layer cross-attention
+    vlm         — llama-3.2-vision-style: causal decoder, a gated
+                  cross-attention block (to stub image embeddings) inserted
+                  every ``cross_attn_every`` layers
+
+Everything scans over stacked layer params (HLO size O(1) in depth, which
+keeps 512-device compiles tractable — DESIGN.md §7.2), with optional remat.
+``forward(..., collect_cache=True)`` additionally returns the decode caches
+(prefill); ``models.decode`` consumes them.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from . import attention as attn
+from . import mlp as mlp_mod
+from . import ssm as ssm_mod
+from .common import Leaf, is_leaf, ones_init, rmsnorm, shard
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _unstack(tree):
+    """Strip the leading 'layers' axis from a stacked Leaf tree."""
+    return jax.tree.map(lambda l: Leaf(l[0][0], l[1].axes[1:]), tree,
+                        is_leaf=is_leaf)
+
+
+def hybrid_groups(cfg: ModelConfig) -> Tuple[int, int, int]:
+    """(n_groups, group_size, tail) for the zamba2 grouped scan."""
+    g = cfg.attn_every
+    n_apps = cfg.n_layers // g
+    return n_apps, g, cfg.n_layers - n_apps * g
+
+
+def init_params(key, cfg: ModelConfig) -> Any:
+    """Returns a Leaf pytree (common.split() -> params, logical axes)."""
+    keys = jax.random.split(key, 16)
+    d = cfg.d_model
+    p: Dict[str, Any] = {
+        "embed": Leaf(0.02 * jax.random.normal(
+            keys[0], (cfg.vocab, d), jnp.float32), ("vocab", "embed")),
+        "final_norm": ones_init((d,), ("embed",)),
+    }
+    if not cfg.tie_embeddings:
+        p["unembed"] = Leaf((1.0 / d ** 0.5) * jax.random.normal(
+            keys[1], (d, cfg.vocab), jnp.float32), ("embed", "vocab"))
+
+    L = cfg.n_layers
+    if cfg.family in ("dense", "moe"):
+        p["layers"] = {
+            "ln1": ones_init((L, d), ("layers", "embed")),
+            "ln2": ones_init((L, d), ("layers", "embed")),
+            "attn": attn.init_attention(keys[2], cfg, L),
+            "ffn": (mlp_mod.init_moe(keys[3], cfg, L) if cfg.family == "moe"
+                    else mlp_mod.init_mlp(keys[3], cfg, L)),
+        }
+    elif cfg.family in ("ssm", "hybrid"):
+        p["layers"] = {
+            "ln1": ones_init((L, d), ("layers", "embed")),
+            "ssm": ssm_mod.init_ssm(keys[2], cfg, L),
+        }
+        if cfg.family == "hybrid":
+            p["shared"] = {
+                "ln1": ones_init((d,), ("embed",)),
+                "ln2": ones_init((d,), ("embed",)),
+                "attn": _unstack(attn.init_attention(keys[3], cfg, 1)),
+                "mlp": _unstack(mlp_mod.init_mlp(keys[4], cfg, 1)),
+            }
+    elif cfg.family == "encdec":
+        Le = cfg.n_enc_layers
+        p["encoder"] = {
+            "ln1": ones_init((Le, d), ("layers", "embed")),
+            "ln2": ones_init((Le, d), ("layers", "embed")),
+            "attn": attn.init_attention(keys[2], cfg, Le),
+            "ffn": mlp_mod.init_mlp(keys[3], cfg, Le),
+        }
+        p["enc_norm"] = ones_init((d,), ("embed",))
+        p["layers"] = {
+            "ln1": ones_init((L, d), ("layers", "embed")),
+            "ln2": ones_init((L, d), ("layers", "embed")),
+            "ln3": ones_init((L, d), ("layers", "embed")),
+            "attn": attn.init_attention(keys[4], cfg, L),
+            "cross": attn.init_attention(keys[5], cfg, L),
+            "ffn": mlp_mod.init_mlp(keys[6], cfg, L),
+        }
+    elif cfg.family == "vlm":
+        p["layers"] = {
+            "ln1": ones_init((L, d), ("layers", "embed")),
+            "ln2": ones_init((L, d), ("layers", "embed")),
+            "attn": attn.init_attention(keys[2], cfg, L),
+            "ffn": mlp_mod.init_mlp(keys[3], cfg, L),
+        }
+        n_cross = L // cfg.cross_attn_every
+        p["cross_layers"] = {
+            "ln": ones_init((n_cross, d), ("layers", "embed")),
+            "attn": attn.init_attention(keys[4], cfg, n_cross),
+            "gate": Leaf(jnp.zeros((n_cross,), jnp.float32), ("layers",)),
+        }
+    else:
+        raise ValueError(cfg.family)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# blocks (params already unstacked)
+# ---------------------------------------------------------------------------
+
+def _residual_shard(x, cfg):
+    if cfg.sequence_parallel and x.ndim == 3:
+        return shard(x, ("pod", "data"), "model", None)
+    return shard(x, ("pod", "data"), None, None)
+
+
+def _dense_block(pl_, x, cfg, *, causal=True, collect_kv=False):
+    h, kv = attn.apply_attention(
+        pl_["attn"], rmsnorm(x, pl_["ln1"], cfg.norm_eps), cfg,
+        causal=causal, collect_kv=collect_kv)
+    x = _residual_shard(x + h, cfg)
+    if "router" in pl_["ffn"]:
+        h, aux = mlp_mod.apply_moe(pl_["ffn"],
+                                   rmsnorm(x, pl_["ln2"], cfg.norm_eps), cfg)
+    else:
+        h = mlp_mod.apply_mlp(pl_["ffn"], rmsnorm(x, pl_["ln2"], cfg.norm_eps),
+                              cfg)
+        aux = jnp.zeros((), jnp.float32)
+    return _residual_shard(x + h, cfg), aux, kv
+
+
+def _ssm_block(pl_, x, cfg, *, collect_cache=False):
+    h, c = ssm_mod.apply_ssm(pl_["ssm"], rmsnorm(x, pl_["ln1"], cfg.norm_eps),
+                             cfg, collect_cache=collect_cache)
+    return _residual_shard(x + h, cfg), c
+
+
+def _shared_block(ps, x, cfg, *, collect_kv=False):
+    h, kv = attn.apply_attention(ps["attn"],
+                                 rmsnorm(x, ps["ln1"], cfg.norm_eps), cfg,
+                                 collect_kv=collect_kv)
+    x = x + h
+    h = mlp_mod.apply_mlp(ps["mlp"], rmsnorm(x, ps["ln2"], cfg.norm_eps), cfg)
+    return _residual_shard(x + h, cfg), kv
+
+
+# ---------------------------------------------------------------------------
+# layer-scan helper
+# ---------------------------------------------------------------------------
+
+def scan_layers(stacked, x, body, cfg):
+    """body(layer_params, x) -> (x, aux, ys).  Scans with optional remat."""
+    def f(carry, pl_):
+        x, aux = carry
+        x, aux_l, ys = body(pl_, x)
+        return (x, aux + aux_l), ys
+
+    if cfg.remat:
+        f = jax.checkpoint(f)
+    (x, aux), ys = jax.lax.scan(f, (x, jnp.zeros((), jnp.float32)), stacked)
+    return x, aux, ys
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+def forward(params: Dict, tokens: jax.Array, cfg: ModelConfig, *,
+            frontend: Optional[jax.Array] = None,
+            collect_cache: bool = False,
+            ) -> Tuple[jax.Array, jax.Array, Optional[Dict]]:
+    """tokens: (B, S) int32 -> (logits (B, S, V), aux_loss, caches|None).
+
+    ``frontend`` feeds the stubbed modality input (vlm: (B, 1601, D) image
+    patch embeddings; encdec: (B, 1500, D) audio frames)."""
+    compute = jnp.dtype(cfg.dtype)
+    x = jnp.take(params["embed"], tokens, axis=0).astype(compute)
+    x = _residual_shard(x, cfg)
+    cc = collect_cache
+    caches: Dict[str, Any] = {}
+
+    if cfg.family in ("dense", "moe"):
+        def body(pl_, x):
+            return _dense_block(pl_, x, cfg, collect_kv=cc)
+        x, aux, kv = scan_layers(params["layers"], x, body, cfg)
+        if cc:
+            caches["self"] = kv                      # (L, B, S, kvd) tree
+
+    elif cfg.family == "ssm":
+        def body(pl_, x):
+            x, c = _ssm_block(pl_, x, cfg, collect_cache=cc)
+            return x, jnp.zeros((), jnp.float32), c
+        x, aux, c = scan_layers(params["layers"], x, body, cfg)
+        if cc:
+            caches["ssm"] = c
+
+    elif cfg.family == "hybrid":
+        n_apps, gsz, tail = hybrid_groups(cfg)
+        main = jax.tree.map(
+            lambda a: a[:n_apps * gsz].reshape(n_apps, gsz, *a.shape[1:]),
+            params["layers"])
+        shared_kv = []
+        ssm_caches = []
+
+        def body(pl_, x):
+            x, c = _ssm_block(pl_, x, cfg, collect_cache=cc)
+            return x, jnp.zeros((), jnp.float32), c
+
+        shared_fn = (lambda v: _shared_block(params["shared"], v, cfg,
+                                             collect_kv=cc))
+        if cfg.remat:
+            shared_fn = jax.checkpoint(shared_fn)
+        aux = jnp.zeros((), jnp.float32)
+        for gi in range(n_apps):
+            stacked_g = jax.tree.map(lambda a: a[gi], main)
+            x, aux_g, c = scan_layers(stacked_g, x, body, cfg)
+            aux = aux + aux_g
+            x, kv = shared_fn(x)
+            if cc:
+                ssm_caches.append(c)
+                shared_kv.append(kv)
+        if tail:
+            tstack = jax.tree.map(lambda a: a[n_apps * gsz:], params["layers"])
+            x, aux_t, c = scan_layers(tstack, x, body, cfg)
+            aux = aux + aux_t
+            if cc:
+                ssm_caches.append(c)
+        if cc:
+            caches["ssm"] = jax.tree.map(
+                lambda *xs: jnp.concatenate(xs, axis=0), *ssm_caches)
+            caches["shared"] = jax.tree.map(
+                lambda *xs: jnp.stack(xs, axis=0), *shared_kv)
+
+    elif cfg.family == "encdec":
+        assert frontend is not None, "encdec needs stub frame embeddings"
+        enc = _residual_shard(frontend.astype(compute), cfg)
+
+        def enc_body(pl_, h):
+            return _dense_block(pl_, h, cfg, causal=False)
+        enc, aux_e, _ = scan_layers(params["encoder"], enc, enc_body, cfg)
+        enc = rmsnorm(enc, params["enc_norm"], cfg.norm_eps)
+
+        def body(pl_, x):
+            h, kv = attn.apply_attention(
+                pl_["attn"], rmsnorm(x, pl_["ln1"], cfg.norm_eps), cfg,
+                collect_kv=cc)
+            x = x + h
+            h, _ = attn.apply_attention(
+                pl_["cross"], rmsnorm(x, pl_["ln2"], cfg.norm_eps), cfg,
+                kv_x=enc, causal=False)
+            x = _residual_shard(x + h, cfg)
+            h = mlp_mod.apply_mlp(pl_["ffn"],
+                                  rmsnorm(x, pl_["ln3"], cfg.norm_eps), cfg)
+            return _residual_shard(x + h, cfg), jnp.zeros((), jnp.float32), kv
+        x, aux_d, kv = scan_layers(params["layers"], x, body, cfg)
+        aux = aux_e + aux_d
+        if cc:
+            caches["self"] = kv
+            caches["enc_out"] = enc
+
+    elif cfg.family == "vlm":
+        assert frontend is not None, "vlm needs stub image embeddings"
+        img = frontend.astype(compute)
+        period = cfg.cross_attn_every
+        n_groups = cfg.n_layers // period
+        grouped = jax.tree.map(
+            lambda a: a.reshape(n_groups, period, *a.shape[1:]),
+            params["layers"])
+        aux = jnp.zeros((), jnp.float32)
+        self_kv = []
+
+        def cross_fn(cl, x):
+            h, _ = attn.apply_attention(
+                cl["attn"], rmsnorm(x, cl["ln"], cfg.norm_eps), cfg,
+                kv_x=img, causal=False)
+            return _residual_shard(x + jnp.tanh(cl["gate"]) * h, cfg)
+
+        if cfg.remat:
+            cross_fn = jax.checkpoint(cross_fn)
+        for gi in range(n_groups):
+            cl = jax.tree.map(lambda a: a[gi], params["cross_layers"])
+            x = cross_fn(cl, x)
+            stacked_g = jax.tree.map(lambda a: a[gi], grouped)
+
+            def body(pl_, x):
+                return _dense_block(pl_, x, cfg, collect_kv=cc)
+            x, aux_g, kv = scan_layers(stacked_g, x, body, cfg)
+            aux = aux + aux_g
+            if cc:
+                self_kv.append(kv)
+        if cc:
+            caches["self"] = jax.tree.map(
+                lambda *xs: jnp.concatenate(xs, axis=0), *self_kv)
+    else:
+        raise ValueError(cfg.family)
+
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    w_out = (params["embed"].T if cfg.tie_embeddings else params["unembed"])
+    logits = jnp.dot(x.astype(compute), w_out.astype(compute),
+                     preferred_element_type=jnp.float32)
+    logits = shard(logits, ("pod", "data"), None, "model")
+    return logits, aux, (caches or None)

@@ -1,0 +1,3 @@
+"""Optimizers (AdamW + 8-bit state)."""
+from . import adamw
+from .adamw import AdamWConfig, OptState

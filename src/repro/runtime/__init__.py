@@ -1,0 +1,3 @@
+"""Fault-tolerant runtime."""
+from . import driver
+from .driver import RunConfig, SimulatedFailure, TrainDriver, run_with_restarts

@@ -1,0 +1,3 @@
+"""Batched decode engine."""
+from . import engine
+from .engine import DecodeEngine, ServeConfig

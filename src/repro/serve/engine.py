@@ -1,0 +1,74 @@
+"""Batched decode engine: prefill + greedy/temperature decode loop.
+
+Serving counterpart to the train driver: jit-compiled prefill and
+decode_step (the same functions the decode dry-run cells lower), a batch of
+independent sequences, and per-sequence EOS tracking — the minimal but real
+engine the examples drive.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ModelConfig
+from ..models import decode as dec
+
+
+@dataclasses.dataclass
+class ServeConfig:
+    max_new_tokens: int = 32
+    temperature: float = 0.0       # 0 = greedy
+    eos_id: Optional[int] = None
+    seed: int = 0
+
+
+class DecodeEngine:
+    def __init__(self, params, cfg: ModelConfig,
+                 serve_cfg: ServeConfig = ServeConfig()):
+        self.params = params
+        self.cfg = cfg
+        self.serve_cfg = serve_cfg
+        self._prefill = jax.jit(functools.partial(dec.prefill, cfg=cfg),
+                                static_argnames=("max_len",))
+        self._step = jax.jit(functools.partial(dec.decode_step, cfg=cfg))
+
+    def generate(self, prompts: np.ndarray, *,
+                 frontend: Optional[np.ndarray] = None,
+                 max_new_tokens: Optional[int] = None,
+                 ) -> Tuple[np.ndarray, Dict]:
+        """prompts: (B, S0) int32.  Returns (generated (B, T), stats)."""
+        scfg = self.serve_cfg
+        t_new = max_new_tokens or scfg.max_new_tokens
+        b, s0 = prompts.shape
+        max_len = s0 + t_new
+        logits, cache = self._prefill(
+            self.params, jnp.asarray(prompts),
+            frontend=None if frontend is None else jnp.asarray(frontend),
+            max_len=max_len)
+        key = jax.random.PRNGKey(scfg.seed)
+        out = []
+        done = np.zeros((b,), bool)
+        tok = self._sample(logits, key)
+        for t in range(t_new):
+            out.append(np.asarray(tok))
+            if scfg.eos_id is not None:
+                done |= out[-1][:, 0] == scfg.eos_id
+                if done.all():
+                    break
+            logits, cache = self._step(self.params, tok, cache)
+            key, sub = jax.random.split(key)
+            tok = self._sample(logits, sub)
+        gen = np.concatenate(out, axis=1)
+        return gen, {"prefill_len": s0, "generated": gen.shape[1]}
+
+    def _sample(self, logits: jax.Array, key) -> jax.Array:
+        if self.serve_cfg.temperature <= 0.0:
+            return jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+        scaled = logits / self.serve_cfg.temperature
+        return jax.random.categorical(key, scaled, axis=-1)[:, None].astype(
+            jnp.int32)

@@ -1,0 +1,3 @@
+"""Training step + sharding."""
+from . import trainer
+from .trainer import TrainState, init_state, make_sharded_train_step, make_train_step

@@ -1,0 +1,138 @@
+"""Training step: loss, grads, AdamW update — sharded via logical axis rules.
+
+``make_train_step`` returns a jit-compiled (in/out-sharded, donated) step:
+  * params/opt-state sharded FSDP(+TP) from their logical axes,
+  * batch sharded over (pod, data),
+  * gradients reduced by GSPMD (psum inserted automatically from shardings),
+  * optional int8 error-feedback gradient compression on the pod (DCI) axis
+    is exercised in dist/collectives (the production flag plumbs it into the
+    DP reduction; documented in DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..configs.base import ModelConfig
+from ..models import common, transformer
+from ..optim import adamw
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: adamw.OptState
+
+
+def init_state(key, cfg: ModelConfig, opt_cfg: adamw.AdamWConfig
+               ) -> Tuple[TrainState, Any]:
+    """Returns (state, logical axes tree for the params)."""
+    params, axes = common.split(transformer.init_params(key, cfg))
+    opt = adamw.init(params, opt_cfg)
+    return TrainState(params, opt), axes
+
+
+def loss_fn(params, batch: Dict, cfg: ModelConfig) -> Tuple[jax.Array, Dict]:
+    logits, aux, _ = transformer.forward(
+        params, batch["tokens"], cfg, frontend=batch.get("frontend"))
+    ce = common.cross_entropy(logits, batch["targets"])
+    loss = ce + 0.01 * aux
+    return loss, {"ce": ce, "aux": aux}
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: adamw.AdamWConfig):
+    """Unsharded (single-device / auto-sharded) train step."""
+
+    def step(state: TrainState, batch: Dict) -> Tuple[TrainState, Dict]:
+        (loss, parts), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(state.params, batch, cfg)
+        new_params, new_opt, om = adamw.apply_updates(
+            state.params, grads, state.opt, opt_cfg)
+        metrics = {"loss": loss, **parts, **om}
+        return TrainState(new_params, new_opt), metrics
+
+    return step
+
+
+# ---------------------------------------------------------------------------
+# sharded compilation
+# ---------------------------------------------------------------------------
+
+def state_shardings(state_shape: TrainState, axes: Any, mesh: Mesh,
+                    rules: common.AxisRules = common.DEFAULT_RULES
+                    ) -> TrainState:
+    """NamedShardings for a TrainState from the params' logical axes.
+
+    Optimizer moments reuse the param specs (same shapes); 8-bit moments
+    (different shapes) shard their leading block dim over 'data' when
+    divisible — the ZeRO property is preserved either way."""
+    mesh_shape = dict(zip(mesh.axis_names, mesh.devices.shape))
+    pspecs = rules.specs(axes, state_shape.params, mesh_shape)
+
+    def moment_spec(like_shape) -> P:
+        d = mesh_shape.get("data", 1)
+        if len(like_shape) >= 1 and like_shape[0] % max(d, 1) == 0 and d > 1:
+            return P("data", *([None] * (len(like_shape) - 1)))
+        return P(*([None] * len(like_shape)))
+
+    params_treedef = jax.tree.structure(state_shape.params)
+
+    def moments(mtree):
+        # match structure: fp32 moments mirror params; Q8 leaves flatten to
+        # (q, scale, shape-static)
+        flat_like = jax.tree.leaves(mtree,
+                                    is_leaf=lambda x: isinstance(x, adamw.Q8))
+        flat_p = jax.tree.leaves(pspecs, is_leaf=lambda x: isinstance(x, P))
+        out = []
+        for like, ps in zip(flat_like, flat_p):
+            if isinstance(like, adamw.Q8):
+                out.append(adamw.Q8(moment_spec(like.q.shape),
+                                    moment_spec(like.scale.shape),
+                                    like.shape))
+            else:
+                out.append(ps)
+        return jax.tree.unflatten(params_treedef, out)
+
+    def named(tree):
+        return jax.tree.map(
+            lambda s: NamedSharding(mesh, s) if isinstance(s, P) else s,
+            tree, is_leaf=lambda x: isinstance(x, P))
+
+    return TrainState(
+        params=named(pspecs),
+        opt=adamw.OptState(
+            NamedSharding(mesh, P()),
+            named(moments(state_shape.opt.m)),
+            named(moments(state_shape.opt.v))),
+    )
+
+
+def batch_shardings(mesh: Mesh, with_frontend: bool = False) -> Dict:
+    bs = NamedSharding(mesh, P(
+        tuple(a for a in ("pod", "data") if a in mesh.axis_names), None))
+    out = {"tokens": bs, "targets": bs}
+    if with_frontend:
+        out["frontend"] = NamedSharding(mesh, P(
+            tuple(a for a in ("pod", "data") if a in mesh.axis_names),
+            None, None))
+    return out
+
+
+def make_sharded_train_step(cfg: ModelConfig, opt_cfg: adamw.AdamWConfig,
+                            mesh: Mesh, state_shape: TrainState, axes: Any,
+                            rules: common.AxisRules = common.DEFAULT_RULES,
+                            donate: bool = True):
+    """jit with explicit in/out shardings; state donated (in-place update)."""
+    st_sh = state_shardings(state_shape, axes, mesh, rules)
+    b_sh = batch_shardings(mesh, with_frontend=cfg.family in ("encdec", "vlm"))
+    step = make_train_step(cfg, opt_cfg)
+    metrics_sh = None  # replicated scalars
+    return jax.jit(
+        step,
+        in_shardings=(st_sh, b_sh),
+        out_shardings=(st_sh, metrics_sh),
+        donate_argnums=(0,) if donate else (),
+    ), st_sh, b_sh

@@ -1,0 +1,27 @@
+"""Distributed STT-GEMM engine tests (8 fake devices in a subprocess).
+
+The pytest process has already initialized jax with a single CPU device, so
+all device-count-dependent assertions live in repro.dist.selftest and run in
+a fresh interpreter.
+"""
+import os
+import subprocess
+import sys
+
+import pytest
+
+
+def run_selftest(module: str, timeout: int = 600) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    proc = subprocess.run(
+        [sys.executable, "-m", module], env=env, capture_output=True,
+        text=True, timeout=timeout)
+    assert proc.returncode == 0, f"STDOUT:\n{proc.stdout}\nSTDERR:\n{proc.stderr}"
+    return proc.stdout
+
+
+def test_distributed_engine_selftest():
+    out = run_selftest("repro.dist.selftest")
+    assert "ALL DIST SELFTESTS PASSED" in out

@@ -1,0 +1,42 @@
+"""The runnable examples must stay runnable (subprocess smoke tests)."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+
+
+def run_example(name, *args, timeout=600):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    proc = subprocess.run(
+        [sys.executable, os.path.join(ROOT, "examples", name), *args],
+        capture_output=True, text=True, timeout=timeout, cwd=ROOT, env=env)
+    assert proc.returncode == 0, \
+        f"STDOUT:\n{proc.stdout[-2000:]}\nSTDERR:\n{proc.stderr[-2000:]}"
+    return proc.stdout
+
+
+def test_quickstart():
+    out = run_example("quickstart.py")
+    assert "quickstart OK" in out
+
+
+def test_serve_lm():
+    out = run_example("serve_lm.py", "--batch", "2", "--prompt-len", "12",
+                      "--new-tokens", "4")
+    assert "serve OK" in out
+
+
+def test_train_lm_short():
+    out = run_example("train_lm.py", "--steps", "40", "--d-model", "64",
+                      "--layers", "2", "--seq", "32", "--batch", "4",
+                      "--ckpt-dir", "/tmp/repro_ex_train")
+    assert "DECREASED" in out
+
+
+def test_dse_explore():
+    out = run_example("dse_explore.py")
+    assert "pareto frontier" in out

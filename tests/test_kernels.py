@@ -1,0 +1,200 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps + property tests.
+
+All kernels run in interpret=True mode (CPU container; TPU is the target).
+"""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core import algebra, stt, plan
+from repro.kernels import flash_attention as fa
+from repro.kernels import ops, ref, ssd_scan, stt_gemm
+
+
+RNG = np.random.default_rng(42)
+
+
+def randn(*shape, dtype=np.float32):
+    return RNG.standard_normal(shape).astype(dtype)
+
+
+TOL = {np.float32: 2e-5, jnp.bfloat16: 6e-2}
+
+
+# ---------------------------------------------------------------------------
+# GEMM templates
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("template", ["output_stationary",
+                                      "operand_stationary",
+                                      "reduction_tree"])
+@pytest.mark.parametrize("m,n,k,bm,bn,bk", [
+    (64, 64, 64, 16, 16, 16),
+    (128, 32, 96, 32, 16, 32),
+    (16, 16, 16, 16, 16, 16),      # single block
+    (100, 52, 70, 32, 32, 32),     # ragged -> padded by ops
+])
+def test_gemm_templates_shape_sweep(template, m, n, k, bm, bn, bk):
+    a, b = randn(m, k), randn(k, n)
+    got = ops.stt_matmul(jnp.array(a), jnp.array(b), template=template,
+                         bm=bm, bn=bn, bk=bk, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), a @ b, rtol=1e-4, atol=1e-3)
+
+
+@pytest.mark.parametrize("dtype", ["float32", "bfloat16"])
+def test_gemm_dtype_sweep(dtype):
+    a = jnp.array(randn(64, 64)).astype(dtype)
+    b = jnp.array(randn(64, 64)).astype(dtype)
+    got = ops.stt_matmul(a, b, template="output_stationary",
+                         bm=32, bn=32, bk=32, interpret=True)
+    want = ref.matmul_ref(a, b)
+    assert got.dtype == a.dtype
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=5e-2, atol=5e-1)
+
+
+@pytest.mark.parametrize("stationary", ["A", "B"])
+def test_operand_stationary_both_operands(stationary):
+    a, b = randn(64, 96), randn(96, 48)
+    got = stt_gemm.matmul_operand_stationary(
+        jnp.array(a), jnp.array(b), stationary=stationary,
+        bm=16, bn=16, bk=32, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), a @ b, rtol=1e-4, atol=1e-3)
+
+
+def test_template_dispatch_from_stt_plan():
+    """The full paper pipeline: STT matrix -> plan -> kernel -> numbers."""
+    g = algebra.gemm()
+    for kind in ["output_stationary", "weight_stationary", "input_stationary"]:
+        df = stt.apply_stt(g, ("m", "n", "k"), stt.stt_from_name(kind))
+        kp = plan.kernel_plan_for(df)
+        a, b = randn(64, 64), randn(64, 64)
+        got = ops.matmul_from_plan(kp, jnp.array(a), jnp.array(b),
+                                   bm=32, bn=32, bk=32, interpret=True)
+        np.testing.assert_allclose(np.asarray(got), a @ b, rtol=1e-4,
+                                   atol=1e-3)
+
+
+@given(st.integers(1, 5), st.integers(1, 5), st.integers(1, 5))
+@settings(max_examples=10, deadline=None)
+def test_gemm_property_random_ragged(mi, ni, ki):
+    """Property: padding logic is correct for arbitrary ragged shapes."""
+    m, n, k = 13 * mi, 9 * ni, 11 * ki
+    a, b = randn(m, k), randn(k, n)
+    got = ops.stt_matmul(jnp.array(a), jnp.array(b),
+                         template="output_stationary",
+                         bm=32, bn=32, bk=32, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), a @ b, rtol=1e-4, atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# Flash attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("causal,window", [(True, None), (True, 16),
+                                           (False, None)])
+@pytest.mark.parametrize("hq,hkv", [(4, 4), (4, 2), (8, 1)])
+def test_attention_masks_and_gqa(causal, window, hq, hkv):
+    q = jnp.array(randn(2, hq, 64, 32))
+    k = jnp.array(randn(2, hkv, 64, 32))
+    v = jnp.array(randn(2, hkv, 64, 32))
+    got = ops.attention(q, k, v, causal=causal, window=window,
+                        bq=16, bkv=16, interpret=True)
+    want = ref.attention_ref(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_attention_bf16():
+    q = jnp.array(randn(1, 2, 64, 32)).astype(jnp.bfloat16)
+    k = jnp.array(randn(1, 2, 64, 32)).astype(jnp.bfloat16)
+    v = jnp.array(randn(1, 2, 64, 32)).astype(jnp.bfloat16)
+    got = ops.attention(q, k, v, causal=True, bq=32, bkv=32, interpret=True)
+    want = ref.attention_ref(q, k, v, causal=True)
+    assert got.dtype == jnp.bfloat16
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=6e-2, atol=6e-2)
+
+
+def test_attention_ragged_q():
+    q = jnp.array(randn(1, 2, 50, 16))
+    k = jnp.array(randn(1, 2, 64, 16))
+    v = jnp.array(randn(1, 2, 64, 16))
+    got = ops.attention(q, k, v, causal=True, bq=16, bkv=16, interpret=True)
+    want = ref.attention_ref(q, k, v, causal=True)
+    assert got.shape == (1, 2, 50, 16)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_attention_fully_masked_rows_are_zero():
+    """SWA window smaller than block: early rows of later q blocks mask out
+    whole kv blocks; online softmax must not produce NaNs."""
+    q = jnp.array(randn(1, 1, 64, 16))
+    k = jnp.array(randn(1, 1, 64, 16))
+    v = jnp.array(randn(1, 1, 64, 16))
+    got = ops.attention(q, k, v, causal=True, window=4, bq=16, bkv=16,
+                        interpret=True)
+    assert bool(jnp.isfinite(got).all())
+    want = ref.attention_ref(q, k, v, causal=True, window=4)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# SSD scan
+# ---------------------------------------------------------------------------
+
+def ssd_inputs(B=2, L=128, H=4, P=16, G=2, N=8):
+    x = randn(B, L, H, P)
+    dt = (0.1 + 0.9 * RNG.random((B, L, H))).astype(np.float32)
+    a = (-0.5 - RNG.random(H)).astype(np.float32)
+    b = randn(B, L, G, N)
+    c = randn(B, L, G, N)
+    return map(jnp.array, (x, dt, a, b, c))
+
+
+@pytest.mark.parametrize("chunk", [16, 32, 64])
+def test_ssd_chunk_sweep(chunk):
+    x, dt, a, b, c = ssd_inputs()
+    want, _ = ref.ssd_ref(x, dt, a, b, c)
+    got = ops.ssd(x, dt, a, b, c, chunk=chunk, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("G", [1, 2, 4])
+def test_ssd_group_broadcast(G):
+    x, dt, a, b, c = ssd_inputs(G=G, H=4)
+    want, _ = ref.ssd_ref(x, dt, a, b, c)
+    got = ops.ssd(x, dt, a, b, c, chunk=32, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_ssd_chunked_ref_equals_sequential_ref():
+    """The chunked XLA path (used by models) == sequential oracle."""
+    x, dt, a, b, c = ssd_inputs(L=256)
+    y1, h1 = ref.ssd_ref(x, dt, a, b, c)
+    y2, h2 = ref.ssd_chunked_ref(x, dt, a, b, c, chunk=64)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(h1), np.asarray(h2),
+                               rtol=2e-4, atol=2e-4)
+
+
+@given(st.integers(1, 4))
+@settings(max_examples=6, deadline=None)
+def test_ssd_state_continuity_property(nc):
+    """Splitting a sequence across chunk boundaries must not change y —
+    the stationary-state invariant of the dataflow."""
+    L = 32 * nc
+    x, dt, a, b, c = ssd_inputs(B=1, L=L, H=2, P=8, G=1, N=4)
+    got = ops.ssd(x, dt, a, b, c, chunk=32, interpret=True)
+    want, _ = ref.ssd_ref(x, dt, a, b, c)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)

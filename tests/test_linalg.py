@@ -1,0 +1,87 @@
+"""Exact linear algebra: unit + property tests."""
+from fractions import Fraction
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import linalg
+
+
+def rand_matrix(draw, m, n, lo=-3, hi=3):
+    return linalg.mat([[draw for _ in range(n)] for _ in range(m)])
+
+
+small_int = st.integers(min_value=-3, max_value=3)
+
+
+def mat_strategy(m, n):
+    return st.lists(
+        st.lists(small_int, min_size=n, max_size=n), min_size=m, max_size=m
+    ).map(linalg.mat)
+
+
+class TestBasics:
+    def test_identity_matmul(self):
+        a = linalg.mat([[1, 2], [3, 4]])
+        assert linalg.matmul(a, linalg.identity(2)) == a
+
+    def test_inverse_known(self):
+        a = linalg.mat([[1, 0, 0], [0, 1, 0], [1, 1, 1]])
+        inv = linalg.inverse(a)
+        assert linalg.matmul(a, inv) == linalg.identity(3)
+
+    def test_inverse_singular_raises(self):
+        with pytest.raises(ValueError):
+            linalg.inverse(linalg.mat([[1, 2], [2, 4]]))
+
+    def test_nullspace_simple(self):
+        # A = [[1,0,0],[0,0,1]] -> null = e2
+        a = linalg.mat([[1, 0, 0], [0, 0, 1]])
+        ns = linalg.nullspace(a)
+        assert ns == [(Fraction(0), Fraction(1), Fraction(0))]
+
+    def test_integerize(self):
+        v = (Fraction(1, 2), Fraction(-1, 3), Fraction(0))
+        assert linalg.integerize(v) == (Fraction(3), Fraction(-2), Fraction(0))
+        v = (Fraction(-1, 2), Fraction(1, 3), Fraction(0))
+        assert linalg.integerize(v) == (Fraction(3), Fraction(-2), Fraction(0))
+
+    def test_intersect_with_hyperplane(self):
+        # plane spanned by e0,e2; intersect with {x2=0} -> e0
+        basis = [linalg.integerize((Fraction(1), Fraction(0), Fraction(0))),
+                 linalg.integerize((Fraction(0), Fraction(0), Fraction(1)))]
+        normal = (Fraction(0), Fraction(0), Fraction(1))
+        got = linalg.intersect_with_hyperplane(basis, normal)
+        assert got == [(Fraction(1), Fraction(0), Fraction(0))]
+
+
+class TestProperties:
+    @given(mat_strategy(3, 3))
+    @settings(max_examples=200, deadline=None)
+    def test_rank_nullity(self, a):
+        assert linalg.rank(a) + len(linalg.nullspace(a)) == 3
+
+    @given(mat_strategy(3, 3))
+    @settings(max_examples=200, deadline=None)
+    def test_nullspace_annihilates(self, a):
+        for v in linalg.nullspace(a):
+            assert all(x == 0 for x in linalg.matvec(a, v))
+
+    @given(mat_strategy(3, 3))
+    @settings(max_examples=200, deadline=None)
+    def test_inverse_roundtrip(self, a):
+        if linalg.det(a) == 0:
+            with pytest.raises(ValueError):
+                linalg.inverse(a)
+        else:
+            assert linalg.matmul(a, linalg.inverse(a)) == linalg.identity(3)
+
+    @given(mat_strategy(2, 4))
+    @settings(max_examples=100, deadline=None)
+    def test_rank_transpose_invariant(self, a):
+        assert linalg.rank(a) == linalg.rank(linalg.transpose(a))
+
+    @given(mat_strategy(3, 3), mat_strategy(3, 3))
+    @settings(max_examples=100, deadline=None)
+    def test_det_multiplicative(self, a, b):
+        assert linalg.det(linalg.matmul(a, b)) == linalg.det(a) * linalg.det(b)

@@ -1,0 +1,179 @@
+"""STT dataflow generation: paper examples, invariants, property tests."""
+import itertools
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import algebra, linalg, stt
+from repro.core.stt import DataflowClass as DC
+
+
+MNK = ("m", "n", "k")
+
+
+def classes(df):
+    return tuple(t.cls for t in df.tensors)
+
+
+class TestPaperExamples:
+    """Every concrete example stated in the paper text."""
+
+    def test_fig1b_space_time_point(self):
+        # i=1, j=2, k=3 with T=[[1,0,0],[0,1,0],[1,1,1]] -> PE(1,2), cycle 6
+        T = stt.stt_from_name("output_stationary")
+        assert linalg.as_int_tuple(linalg.matvec(T, [1, 2, 3])) == (1, 2, 6)
+
+    def test_section4_example_A_systolic_vertical(self):
+        # paper §IV: A[i,k]'s reuse vector under the Fig.1b T is (0,1,1):
+        # systolic, vertical direction
+        g = algebra.gemm()
+        df = stt.apply_stt(g, MNK, stt.stt_from_name("output_stationary"))
+        a = df.by_tensor()["A"]
+        assert a.cls is DC.SYSTOLIC and a.dp == (0, 1) and a.dt == 1
+
+    def test_output_stationary_is_SST(self):
+        g = algebra.gemm()
+        df = stt.apply_stt(g, MNK, stt.stt_from_name("output_stationary"))
+        assert df.name == "MNK-SST"
+        assert classes(df) == (DC.SYSTOLIC, DC.SYSTOLIC, DC.STATIONARY)
+
+    def test_weight_stationary_is_STS(self):
+        g = algebra.gemm()
+        df = stt.apply_stt(g, MNK, stt.stt_from_name("weight_stationary"))
+        assert classes(df) == (DC.SYSTOLIC, DC.STATIONARY, DC.SYSTOLIC)
+
+    def test_identity_is_MMT(self):
+        g = algebra.gemm()
+        df = stt.apply_stt(g, MNK, stt.stt_from_name("identity"))
+        assert classes(df) == (DC.MULTICAST, DC.MULTICAST, DC.STATIONARY)
+        # output stationary letter name
+        assert df.name == "MNK-MMT"
+
+    def test_mttkrp_ikl_ubbb(self):
+        # paper §VI names IKL-UBBB for MTTKRP: A unicast, rest 2-D reuse
+        mt = algebra.mttkrp()
+        df = stt.apply_stt(mt, ("i", "k", "l"), stt.stt_from_name("identity"))
+        assert df.name == "IKL-UBBB"
+        assert df.by_tensor()["A"].cls is DC.UNICAST
+        for t in ("B", "C", "D"):
+            assert df.by_tensor()[t].cls.is_2d
+
+    def test_batched_gemv_A_always_unicast(self):
+        # paper: "Batched-GEMV can only use unicast dataflow because tensor A
+        # is only accessed once" — true for EVERY loop selection and T.
+        bg = algebra.batched_gemv()
+        for sel in itertools.permutations(bg.loops, 3):
+            df = stt.apply_stt(bg, sel, stt.stt_from_name("output_stationary"))
+            assert df.by_tensor()["A"].cls is DC.UNICAST
+
+
+class TestValidity:
+    def test_singular_T_rejected(self):
+        g = algebra.gemm()
+        T = linalg.mat([[1, 0, 0], [1, 0, 0], [0, 0, 1]])
+        with pytest.raises(stt.InvalidSTT):
+            stt.apply_stt(g, MNK, T)
+
+    def test_wrong_size_T_rejected(self):
+        g = algebra.gemm()
+        with pytest.raises(stt.InvalidSTT):
+            stt.apply_stt(g, MNK, linalg.identity(2))
+
+    def test_simulator_detects_collision_for_rank_deficient(self):
+        g = algebra.gemm(4, 4, 4)
+        T = linalg.mat([[1, 0, 0], [0, 1, 0], [1, 1, 0]])  # singular
+        with pytest.raises(stt.InvalidSTT):
+            stt.simulate(g, MNK, T)
+
+
+class TestSimulator:
+    """The space-time simulator proves schedules compute the algebra."""
+
+    @pytest.mark.parametrize("kind", ["identity", "output_stationary",
+                                      "weight_stationary", "input_stationary"])
+    def test_gemm_all_classic_dataflows(self, kind):
+        g = algebra.gemm(5, 4, 3)
+        out, cycles, ext = stt.simulate(g, MNK, stt.stt_from_name(kind))
+        assert cycles >= 3  # at least the reduction depth
+
+    def test_conv2d_kcx(self):
+        cv = algebra.conv2d(4, 3, 4, 4, 2, 2)
+        stt.simulate(cv, ("k", "c", "x"), stt.stt_from_name("identity"))
+
+    def test_mttkrp(self):
+        mt = algebra.mttkrp(3, 3, 3, 3)
+        stt.simulate(mt, ("i", "j", "k"), stt.stt_from_name("output_stationary"))
+
+    def test_ttmc(self):
+        tt = algebra.ttmc(3, 3, 3, 2, 2)
+        stt.simulate(tt, ("i", "j", "k"), stt.stt_from_name("identity"))
+
+    def test_depthwise(self):
+        dw = algebra.depthwise_conv(4, 4, 4, 2, 2)
+        stt.simulate(dw, ("k", "y", "x"), stt.stt_from_name("identity"))
+
+    def test_batched_gemv(self):
+        bg = algebra.batched_gemv(3, 4, 4)
+        stt.simulate(bg, ("m", "n", "k"), stt.stt_from_name("identity"))
+
+
+full_rank_T = st.lists(
+    st.lists(st.integers(min_value=-1, max_value=1), min_size=3, max_size=3),
+    min_size=3, max_size=3,
+).map(linalg.mat).filter(lambda T: linalg.det(T) != 0)
+
+
+class TestProperties:
+    @given(full_rank_T)
+    @settings(max_examples=150, deadline=None)
+    def test_reuse_rank_matches_nullity(self, T):
+        """rank(reuse subspace) == 3 - rank(A_sel): T is a bijection."""
+        g = algebra.gemm()
+        df = stt.apply_stt(g, MNK, T)
+        cols = [g.loop_index(s) for s in MNK]
+        for t, tdf in zip(g.tensors, df.tensors):
+            a_sel = linalg.submatrix_cols(t.access, cols)
+            assert tdf.reuse_rank == 3 - linalg.rank(a_sel)
+
+    @given(full_rank_T)
+    @settings(max_examples=150, deadline=None)
+    def test_gemm_classification_consistency(self, T):
+        """For GEMM every tensor has reuse rank exactly 1, so the class must
+        be one of the three rank-1 classes, and dp/dt predicates must agree
+        with the class."""
+        g = algebra.gemm()
+        df = stt.apply_stt(g, MNK, T)
+        for t in df.tensors:
+            assert t.reuse_rank == 1
+            if t.cls is DC.STATIONARY:
+                assert all(d == 0 for d in t.dp) and t.dt != 0
+            elif t.cls is DC.SYSTOLIC:
+                assert any(d != 0 for d in t.dp) and t.dt != 0
+            else:
+                assert t.cls in (DC.MULTICAST, DC.REDUCTION)
+                assert any(d != 0 for d in t.dp) and t.dt == 0
+
+    @given(full_rank_T)
+    @settings(max_examples=25, deadline=None)
+    def test_simulation_correct_for_any_full_rank_T(self, T):
+        """One-to-one mapping + correct result for arbitrary full-rank T —
+        the paper's central claim about STT validity."""
+        g = algebra.gemm(3, 3, 3)
+        stt.simulate(g, MNK, T)
+
+    @given(full_rank_T, full_rank_T)
+    @settings(max_examples=50, deadline=None)
+    def test_signature_deterministic(self, T1, T2):
+        """Equal T -> equal signature; signatures only depend on T."""
+        g = algebra.gemm()
+        df1 = stt.apply_stt(g, MNK, T1)
+        df1b = stt.apply_stt(g, MNK, T1)
+        assert df1.signature == df1b.signature
+
+    @given(full_rank_T)
+    @settings(max_examples=50, deadline=None)
+    def test_output_never_multicast_input_class(self, T):
+        """Rank-1 dt=0 output must classify as REDUCTION, never MULTICAST."""
+        g = algebra.gemm()
+        df = stt.apply_stt(g, MNK, T)
+        assert df.tensors[-1].cls is not DC.MULTICAST

@@ -1,0 +1,250 @@
+"""Substrate tests: optimizer, data pipeline, checkpointing (atomic/async/
+elastic), fault-tolerant runtime, straggler watchdog, serve engine."""
+import os
+import shutil
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import store
+from repro.configs import get_config
+from repro.data.pipeline import DataConfig, SyntheticPipeline
+from repro.models import init_params, split
+from repro.optim import adamw
+from repro.runtime.driver import (RunConfig, SimulatedFailure, TrainDriver,
+                                  run_with_restarts)
+from repro.serve.engine import DecodeEngine, ServeConfig
+from repro.train import trainer
+
+
+# ---------------------------------------------------------------------------
+# optimizer
+# ---------------------------------------------------------------------------
+
+class TestAdamW:
+    def quad_params(self):
+        return {"w": jnp.array([1.0, -2.0, 3.0]), "b": jnp.array([0.5])}
+
+    def test_converges_on_quadratic(self):
+        cfg = adamw.AdamWConfig(lr=0.1, weight_decay=0.0, warmup_steps=1,
+                                total_steps=200)
+        params = self.quad_params()
+        state = adamw.init(params, cfg)
+        loss = lambda p: sum(jnp.sum(x ** 2) for x in jax.tree.leaves(p))
+        for _ in range(200):
+            g = jax.grad(loss)(params)
+            params, state, _ = adamw.apply_updates(params, g, state, cfg)
+        assert float(loss(params)) < 1e-2
+
+    def test_8bit_state_tracks_fp32(self):
+        params = self.quad_params()
+        loss = lambda p: sum(jnp.sum(x ** 2) for x in jax.tree.leaves(p))
+        outs = {}
+        for bits in (32, 8):
+            cfg = adamw.AdamWConfig(lr=0.05, weight_decay=0.0,
+                                    warmup_steps=1, total_steps=50,
+                                    state_bits=bits)
+            p = self.quad_params()
+            st = adamw.init(p, cfg)
+            for _ in range(50):
+                g = jax.grad(loss)(p)
+                p, st, _ = adamw.apply_updates(p, g, st, cfg)
+            outs[bits] = np.concatenate(
+                [np.asarray(x).ravel() for x in jax.tree.leaves(p)])
+        np.testing.assert_allclose(outs[8], outs[32], atol=0.05)
+
+    def test_8bit_state_memory(self):
+        """int8 moments must be ~4x smaller than fp32."""
+        params = {"w": jnp.zeros((1024, 512))}
+        st8 = adamw.init(params, adamw.AdamWConfig(state_bits=8))
+        st32 = adamw.init(params, adamw.AdamWConfig(state_bits=32))
+        bytes8 = sum(np.asarray(x).nbytes
+                     for x in jax.tree.leaves(st8.m))
+        bytes32 = sum(np.asarray(x).nbytes
+                      for x in jax.tree.leaves(st32.m))
+        assert bytes8 < bytes32 / 3.5
+
+    def test_grad_clipping(self):
+        cfg = adamw.AdamWConfig(clip_norm=1.0)
+        params = self.quad_params()
+        state = adamw.init(params, cfg)
+        huge = jax.tree.map(lambda x: 1e6 * jnp.ones_like(x), params)
+        newp, _, m = adamw.apply_updates(params, huge, state, cfg)
+        assert float(m["grad_norm"]) > 1e5
+        delta = max(float(jnp.abs(a - b).max())
+                    for a, b in zip(jax.tree.leaves(newp),
+                                    jax.tree.leaves(params)))
+        assert delta < 1.0   # clipped update is bounded
+
+    def test_schedule_warmup_and_decay(self):
+        cfg = adamw.AdamWConfig(lr=1.0, warmup_steps=10, total_steps=100,
+                                min_lr_frac=0.1)
+        lrs = [float(adamw.schedule(cfg, jnp.array(s)))
+               for s in [0, 9, 10, 50, 99]]
+        assert lrs[0] < lrs[1] <= lrs[2]          # warmup rises
+        assert lrs[2] > lrs[3] > lrs[4]           # cosine decays
+        assert lrs[4] >= 0.1 * 0.999              # floor
+
+
+# ---------------------------------------------------------------------------
+# data pipeline
+# ---------------------------------------------------------------------------
+
+class TestPipeline:
+    def test_deterministic_and_restart_safe(self):
+        cfg = DataConfig(vocab=64, seq_len=16, global_batch=4)
+        p1 = SyntheticPipeline(cfg)
+        batches = [p1.next() for _ in range(5)]
+        p2 = SyntheticPipeline(cfg)
+        p2.restore({"step": 3})
+        np.testing.assert_array_equal(p2.next()["tokens"],
+                                      batches[3]["tokens"])
+
+    def test_shards_disjoint(self):
+        c0 = DataConfig(vocab=64, seq_len=16, global_batch=8, n_shards=2,
+                        shard=0)
+        c1 = DataConfig(vocab=64, seq_len=16, global_batch=8, n_shards=2,
+                        shard=1)
+        b0 = SyntheticPipeline(c0).next()["tokens"]
+        b1 = SyntheticPipeline(c1).next()["tokens"]
+        assert b0.shape == (4, 16)
+        assert not np.array_equal(b0, b1)
+
+    def test_targets_shifted(self):
+        cfg = DataConfig(vocab=64, seq_len=16, global_batch=2)
+        b = SyntheticPipeline(cfg).next()
+        np.testing.assert_array_equal(b["tokens"][:, 1:], b["targets"][:, :-1])
+
+
+# ---------------------------------------------------------------------------
+# checkpointing
+# ---------------------------------------------------------------------------
+
+class TestCheckpoint:
+    def tree(self):
+        return {"a": jnp.arange(12.0).reshape(3, 4),
+                "nest": {"b": jnp.ones((5,), jnp.int32)}}
+
+    def test_roundtrip(self, tmp_path):
+        t = self.tree()
+        store.save(str(tmp_path), 7, t)
+        got, step, _ = store.restore(str(tmp_path), t)
+        assert step == 7
+        np.testing.assert_array_equal(np.asarray(got["a"]), np.asarray(t["a"]))
+
+    def test_atomicity_tmp_never_visible(self, tmp_path):
+        t = self.tree()
+        store.save(str(tmp_path), 1, t)
+        # a stale tmp dir (simulated crash) must not be listed or restored
+        os.makedirs(tmp_path / "tmp.2")
+        assert store.list_steps(str(tmp_path)) == [1]
+        _, step, _ = store.restore(str(tmp_path), t)
+        assert step == 1
+
+    def test_async_checkpointer_gc(self, tmp_path):
+        ck = store.AsyncCheckpointer(str(tmp_path), keep=2)
+        t = self.tree()
+        for s in (1, 2, 3, 4):
+            ck.save_async(s, t)
+        ck.wait()
+        assert store.list_steps(str(tmp_path)) == [3, 4]
+
+    def test_elastic_restore_other_device_count(self, tmp_path):
+        """Checkpoints carry logical arrays; restoring under a different
+        (here: trivial) sharding works — full elastic path exercised in the
+        512-device dry-run harness."""
+        t = self.tree()
+        store.save(str(tmp_path), 5, t)
+        shardings = jax.tree.map(
+            lambda _: jax.sharding.SingleDeviceSharding(jax.devices()[0]), t)
+        got, _, _ = store.restore(str(tmp_path), t, shardings=shardings)
+        np.testing.assert_array_equal(np.asarray(got["a"]), np.asarray(t["a"]))
+
+    def test_shape_mismatch_rejected(self, tmp_path):
+        store.save(str(tmp_path), 1, self.tree())
+        bad = {"a": jnp.zeros((2, 2)), "nest": {"b": jnp.ones((5,), jnp.int32)}}
+        with pytest.raises(ValueError, match="shape mismatch"):
+            store.restore(str(tmp_path), bad)
+
+
+# ---------------------------------------------------------------------------
+# fault-tolerant runtime
+# ---------------------------------------------------------------------------
+
+def _driver_factory(tmp, cfg, failure_at=None, slow_at=None, steps=30):
+    def make():
+        return TrainDriver(
+            cfg,
+            adamw.AdamWConfig(lr=1e-2, warmup_steps=2, total_steps=steps),
+            DataConfig(vocab=cfg.vocab, seq_len=32, global_batch=8),
+            RunConfig(total_steps=steps, ckpt_every=10, log_every=10,
+                      ckpt_dir=tmp),
+            failure_at=failure_at, slow_step_at=slow_at)
+    return make
+
+
+class TestRuntime:
+    def test_loss_decreases(self, tmp_path):
+        cfg = get_config("granite-8b").reduced()
+        out = _driver_factory(str(tmp_path), cfg, steps=60)().run()
+        losses = [m["loss"] for m in out["metrics"]]
+        assert losses[-1] < losses[0] * 0.8
+
+    def test_restart_after_failure_resumes(self, tmp_path):
+        cfg = get_config("granite-8b").reduced()
+        holder = {"n": 0}
+
+        def make():
+            holder["n"] += 1
+            return _driver_factory(str(tmp_path), cfg,
+                                   failure_at=15 if holder["n"] == 1 else None,
+                                   steps=30)()
+
+        out = run_with_restarts(make, max_restarts=2)
+        assert out["restarts"] == 1
+        assert out["final_step"] == 30
+        # resumed from the step-10 checkpoint, not from scratch
+        assert store.latest_step(str(tmp_path)) == 30
+
+    def test_straggler_watchdog_flags_slow_step(self, tmp_path):
+        cfg = get_config("granite-8b").reduced()
+        out = _driver_factory(str(tmp_path), cfg, slow_at=20, steps=25)().run()
+        assert 20 in out["stragglers"]
+
+    def test_resume_replays_data_stream(self, tmp_path):
+        """After restore, pipeline.step must continue where it left off."""
+        cfg = get_config("granite-8b").reduced()
+        d1 = _driver_factory(str(tmp_path), cfg, steps=20)()
+        d1.run()
+        d2 = _driver_factory(str(tmp_path), cfg, steps=20)()
+        assert d2.start_step == 20
+        assert d2.pipeline.step == 20
+
+
+# ---------------------------------------------------------------------------
+# serve engine
+# ---------------------------------------------------------------------------
+
+class TestServe:
+    def test_greedy_generation_matches_decode(self):
+        cfg = get_config("h2o-danube-1.8b").reduced()
+        params, _ = split(init_params(jax.random.PRNGKey(0), cfg))
+        eng = DecodeEngine(params, cfg, ServeConfig(max_new_tokens=8))
+        prompts = np.random.default_rng(0).integers(
+            0, cfg.vocab, size=(2, 12)).astype(np.int32)
+        gen, stats = eng.generate(prompts)
+        assert gen.shape == (2, 8)
+        assert stats["generated"] == 8
+        # deterministic greedy
+        gen2, _ = eng.generate(prompts)
+        np.testing.assert_array_equal(gen, gen2)
+
+    def test_ssm_generation(self):
+        cfg = get_config("mamba2-370m").reduced()
+        params, _ = split(init_params(jax.random.PRNGKey(0), cfg))
+        eng = DecodeEngine(params, cfg, ServeConfig(max_new_tokens=6))
+        prompts = np.zeros((1, 8), np.int32)
+        gen, _ = eng.generate(prompts)
+        assert gen.shape == (1, 6)
