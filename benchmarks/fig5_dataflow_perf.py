@@ -2,16 +2,21 @@
 tensor algebra, on the paper's 16x16 / 320 MHz / 32 GB/s setup.
 
 Validates the paper's qualitative claims (each printed row notes the claim
-it supports); numbers come from core.costmodel.PaperCycleModel.
+it supports).  Each case now goes through the compile pipeline
+(``repro.compile.lower``): the CostReport comes from the *lowered* kernel,
+so the tile the model prices is the tile the kernel would execute with —
+and ``--execute`` additionally runs every case end-to-end (shrunk bounds,
+interpret mode) against the loop-nest oracle.
 """
 from __future__ import annotations
 
-from repro.core import algebra, costmodel, stt
+import argparse
 
-MODEL = costmodel.PaperCycleModel()
+from repro import compile as rcompile
+from repro.core import algebra, stt
 
 
-#: (algebra factory, selected loops, named STT or matrix, label)
+#: (algebra factory, bounds, selected loops, named STT, label)
 CASES = [
     # GEMM: multicast beats systolic (pipeline fill overhead)
     ("gemm", dict(m=256, n=256, k=256), ("m", "n", "k"), "identity"),
@@ -38,21 +43,41 @@ CASES = [
     ("ttmc", dict(i=32, j=32, k=32, l=16, m=16), ("i", "j", "k"), "identity"),
 ]
 
+#: shrunk bounds for --execute (keep the python oracle and interpret-mode
+#: Pallas run fast while exercising the same (selection, STT) point)
+EXEC_BOUNDS = {
+    "gemm": dict(m=16, n=16, k=16),
+    "batched_gemv": dict(m=4, n=16, k=16),
+    "conv2d": dict(k=8, c=4, y=6, x=6, p=3, q=3),
+    "depthwise_conv": dict(k=8, y=6, x=6, p=3, q=3),
+    "mttkrp": dict(i=8, j=8, k=4, l=4),
+    "ttmc": dict(i=4, j=4, k=4, l=4, m=4),
+}
 
-def run() -> list:
+
+def run(execute: bool = False) -> list:
     rows = []
     for name, bounds, sel, kind in CASES:
         alg = algebra.get_algebra(name, **bounds)
         df = stt.apply_stt(alg, sel, stt.stt_from_name(kind))
-        r = MODEL.evaluate(alg, df)
-        rows.append({
+        kern = rcompile.lower(alg, df, interpret=True, validate=False)
+        r = kern.cost_report()
+        row = {
             "algebra": name, "dataflow": df.name,
+            "template": kern.template,
             "normalized_perf": round(r.normalized_perf, 4),
             "utilization": round(r.utilization, 4),
             "bw_stall": round(r.bw_stall_factor, 2),
             "fill_frac": round(r.fill_overhead_frac, 4),
             "cycles": int(r.cycles),
-        })
+        }
+        if execute:
+            small = algebra.get_algebra(name, **EXEC_BOUNDS[name])
+            sdf = stt.apply_stt(small, sel, stt.stt_from_name(kind))
+            err = rcompile.lower(small, sdf, interpret=True,
+                                 validate=False).validate()
+            row["exec_max_err"] = err
+        rows.append(row)
     return rows
 
 
@@ -79,11 +104,23 @@ def validate(rows) -> list:
 
 
 def main() -> None:
-    rows = run()
-    print("algebra,dataflow,normalized_perf,utilization,bw_stall,fill_frac")
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--execute", action="store_true",
+                    help="also run every case end-to-end (shrunk bounds, "
+                         "interpret mode) against the loop-nest oracle")
+    args = ap.parse_args()
+    rows = run(execute=args.execute)
+    cols = "algebra,dataflow,template,normalized_perf,utilization,bw_stall,fill_frac"
+    if args.execute:
+        cols += ",exec_max_err"
+    print(cols)
     for r in rows:
-        print(f"{r['algebra']},{r['dataflow']},{r['normalized_perf']},"
-              f"{r['utilization']},{r['bw_stall']},{r['fill_frac']}")
+        line = (f"{r['algebra']},{r['dataflow']},{r['template']},"
+                f"{r['normalized_perf']},{r['utilization']},{r['bw_stall']},"
+                f"{r['fill_frac']}")
+        if args.execute:
+            line += f",{r['exec_max_err']:.1e}"
+        print(line)
     print("\npaper-claim validation:")
     for desc, ok in validate(rows):
         print(f"  [{'PASS' if ok else 'FAIL'}] {desc}")

@@ -6,18 +6,29 @@ spread vs ~1.16x area spread, MMT/MMS-style dataflows costing the most
 energy, reduction trees being cheap, and stationary tensors costing area.
 Our enumeration universe is stated in core/dse.py; this benchmark prints the
 sweep summary + the same qualitative checks.
+
+The enumeration now runs on the DSE fast path (per-selection nullspace
+caching, duplicate-basis short-circuiting — ISSUE 1) and the benchmark
+times it; ``--baseline`` additionally times the original per-T pipeline
+for an A/B speedup print.  The best pareto point is then carried through
+``repro.compile.lower`` to a validated executable — plan to kernel, not
+just plan to scatter plot.
 """
 from __future__ import annotations
 
+import argparse
+import time
 from collections import Counter
 
-from repro.core import algebra, costmodel, dse
+from repro import compile as rcompile
+from repro.core import algebra, costmodel, dse, stt
 
 
 def sweep_algebra(alg, selections=None):
-    reports = dse.sweep(alg, selections=selections)
+    pairs = dse.sweep_with_dataflows(alg, selections=selections)
+    reports = [r for r, _ in pairs]
     good = [r for r in reports if r.normalized_perf >= 0.5]
-    return reports, good
+    return reports, good, {id(r): df for r, df in pairs}
 
 
 def summarize(name, reports, good):
@@ -38,13 +49,51 @@ def summarize(name, reports, good):
     for r in sorted(front, key=lambda r: r.cycles)[:5]:
         print(f"  {r.dataflow_name:12s} perf={r.normalized_perf:.3f} "
               f"area={r.area_units:.0f} power={r.power_mw:.1f}mW")
-    return powers, areas
+    return powers, areas, front
+
+
+def lower_winner(alg, front, df_of):
+    """Carry the best pareto point through the compile pipeline at shrunk
+    bounds: the generated accelerator must actually run.  ``df_of`` maps
+    report identity -> Dataflow (names are not unique across a sweep)."""
+    if not front:
+        return
+    best = min(front, key=lambda r: r.cycles)
+    df = df_of.get(id(best))
+    if df is None:
+        return
+    small = alg.with_bounds(**{l: min(b, 8) for l, b in
+                               zip(alg.loops, alg.bounds)})
+    sdf = stt.apply_stt(small, df.selected, df.T)
+    kern = rcompile.lower(small, sdf, interpret=True, validate=True)
+    print(f"lowered pareto winner {df.name}: template={kern.template} "
+          f"blocks={kern.blocks} validated={kern.validated}")
 
 
 def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline", action="store_true",
+                    help="also time the original (per-T apply_stt) "
+                         "enumeration for an A/B speedup print")
+    args = ap.parse_args()
+
     g = algebra.gemm(256, 256, 256)
-    reports, good = sweep_algebra(g, selections=[("m", "n", "k")])
-    powers, areas = summarize("GEMM (16x16, INT16)", reports, good)
+    t0 = time.perf_counter()
+    reports, good, df_of = sweep_algebra(g, selections=[("m", "n", "k")])
+    t_sweep = time.perf_counter() - t0
+    powers, areas, front = summarize("GEMM (16x16, INT16)", reports, good)
+    print(f"sweep time (fast enumeration + costing): {t_sweep:.2f}s")
+    if args.baseline:
+        t0 = time.perf_counter()
+        ref = dse.enumerate_dataflows_reference(g, selections=[("m", "n", "k")])
+        t_ref = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        fast = dse.enumerate_dataflows(g, selections=[("m", "n", "k")])
+        t_fast = time.perf_counter() - t0
+        assert set(ref) == set(fast)
+        print(f"enumeration A/B: seed path {t_ref:.2f}s, fast path "
+              f"{t_fast:.2f}s -> {t_ref / max(t_fast, 1e-9):.1f}x")
+    lower_winner(g, front, df_of)
 
     # paper claims
     mmt = [r for r in good if r.dataflow_name.endswith("MMT")]
@@ -59,8 +108,13 @@ def main() -> None:
 
     dw = algebra.depthwise_conv(256, 28, 28, 3, 3)
     sels = [("k", "x", "y"), ("k", "p", "x"), ("x", "y", "p")]
-    reports_dw, good_dw = sweep_algebra(dw, selections=sels)
-    summarize("Depthwise-Conv2D (16x16, INT16)", reports_dw, good_dw)
+    t0 = time.perf_counter()
+    reports_dw, good_dw, df_of_dw = sweep_algebra(dw, selections=sels)
+    t_dw = time.perf_counter() - t0
+    _, _, front_dw = summarize("Depthwise-Conv2D (16x16, INT16)", reports_dw,
+                               good_dw)
+    print(f"sweep time: {t_dw:.2f}s")
+    lower_winner(dw, front_dw or reports_dw, df_of_dw)
 
     print("\npaper-claim validation:")
     for desc, ok in checks:

@@ -9,6 +9,14 @@ hypothesis -> change -> measure log lives in EXPERIMENTS.md.
 
 Variants are ModelConfig overrides (plus env toggles) registered below; add
 new ones as the hillclimb progresses.
+
+STT cells (ISSUE 1: benchmarks migrate to the compile pipeline): an
+``--stt <algebra>`` cell lowers (algebra x named STT) through
+``repro.compile.lower`` instead, timing cold lowering, cached re-lowering
+and kernel wall time, and appends the record the same way:
+
+    PYTHONPATH=src python -m benchmarks.perf_iterate \
+        --stt gemm --dataflow output_stationary
 """
 import os
 os.environ.setdefault("XLA_FLAGS",
@@ -66,15 +74,82 @@ def run_variant(arch: str, shape: str, variant: str, multi: bool = False):
     return rec
 
 
+def run_stt_cell(name: str, kind: str, interpret: bool = True) -> dict:
+    """One (algebra x named STT) cell through the compile pipeline."""
+    import time
+
+    from repro import compile as rcompile
+    from repro.core import algebra, stt
+
+    alg = algebra.get_algebra(name)
+    df = stt.apply_stt(alg, alg.loops[:3], stt.stt_from_name(kind))
+
+    rcompile.cache_clear()
+    t0 = time.perf_counter()
+    kern = rcompile.lower(alg, df, interpret=interpret, validate=False)
+    t_cold = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    rcompile.lower(alg, df, interpret=interpret, validate=False)
+    t_cached = time.perf_counter() - t0
+
+    operands = alg.random_operands(0)
+    t0 = time.perf_counter()
+    out = kern(operands)
+    out.block_until_ready()
+    t_first = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    out = kern(operands)
+    out.block_until_ready()
+    t_steady = time.perf_counter() - t0
+
+    r = kern.cost_report()
+    return {
+        "cell": f"stt_{name}_{kind}",
+        "algebra": name, "dataflow": df.name,
+        "template": kern.template, "blocks": list(kern.blocks),
+        "lower_cold_s": t_cold, "lower_cached_s": t_cached,
+        "exec_first_s": t_first, "exec_steady_s": t_steady,
+        "cache": rcompile.cache_info(),
+        "model_cycles": r.cycles, "model_perf": r.normalized_perf,
+    }
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
-    ap.add_argument("--shape", required=True)
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
     ap.add_argument("--variant", default="baseline", choices=list(VARIANTS))
     ap.add_argument("--multi", action="store_true")
     ap.add_argument("--out", default="results/perf")
+    ap.add_argument("--stt", metavar="ALGEBRA",
+                    help="run an (algebra x STT) compile-pipeline cell "
+                         "instead of an (arch x shape) model cell")
+    ap.add_argument("--dataflow", default="output_stationary",
+                    help="named STT for --stt cells")
     args = ap.parse_args()
 
+    if args.stt:
+        from repro.core.algebra import PAPER_ALGEBRAS
+        if args.stt not in PAPER_ALGEBRAS:
+            ap.error(f"unknown algebra {args.stt!r}; "
+                     f"choose from {sorted(PAPER_ALGEBRAS)}")
+        rec = run_stt_cell(args.stt, args.dataflow)
+        print(f"\nstt/{args.stt} [{args.dataflow}]")
+        print(f"  template      {rec['template']} blocks={rec['blocks']}")
+        print(f"  lower cold    {rec['lower_cold_s'] * 1e3:.1f} ms")
+        print(f"  lower cached  {rec['lower_cached_s'] * 1e6:.0f} us")
+        print(f"  exec first    {rec['exec_first_s'] * 1e3:.1f} ms")
+        print(f"  exec steady   {rec['exec_steady_s'] * 1e3:.1f} ms")
+        print(f"  model perf    {rec['model_perf']:.3f}")
+        os.makedirs(args.out, exist_ok=True)
+        path = os.path.join(args.out, f"{rec['cell']}.jsonl")
+        with open(path, "a") as f:
+            f.write(json.dumps(rec) + "\n")
+        print(f"appended -> {path}")
+        return
+
+    if not (args.arch and args.shape):
+        ap.error("--arch and --shape are required unless --stt is given")
     rec = run_variant(args.arch, args.shape, args.variant, args.multi)
     r = rec["roofline"]
     print(f"\n{args.arch}/{args.shape} [{args.variant}]")

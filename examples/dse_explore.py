@@ -2,31 +2,44 @@
 
 Enumerates every distinct GEMM dataflow TensorLib can generate for one loop
 selection, costs them with the paper's cycle/area/power model, prints the
-Pareto frontier, and shows the mesh-level schedule each frontier point maps
-to on a TPU pod.
+Pareto frontier with the mesh-level schedule each point maps to on a TPU
+pod, and compiles the best point to a validated executable via
+``repro.compile.lower``.
 
     PYTHONPATH=src python examples/dse_explore.py
 """
+from repro import compile as rcompile
 from repro.core import algebra, dse, plan, stt
 from repro.dist.schedules import schedule_from_comm_plan
 
-g = algebra.gemm(512, 512, 512)
-flows = dse.enumerate_dataflows(g, selections=[("m", "n", "k")])
-print(f"distinct GEMM dataflows (one selection, |T entries| <= 1): "
-      f"{len(flows)}")
 
-reports = dse.sweep(g, selections=[("m", "n", "k")])
-good = [r for r in reports if r.normalized_perf >= 0.5]
+g = algebra.gemm(512, 512, 512)
+# paired sweep: dataflow names repeat across distinct T's, so keep the
+# (report, dataflow) association instead of a name lookup
+pairs = dse.sweep_with_dataflows(g, selections=[("m", "n", "k")])
+print(f"distinct GEMM dataflows (one selection, |T entries| <= 1): "
+      f"{len(pairs)}")
+
+df_of = {id(r): df for r, df in pairs}
+good = [r for r, _ in pairs if r.normalized_perf >= 0.5]
 front = dse.pareto_front(good)
 print(f"efficient points: {len(good)}; pareto frontier: {len(front)}\n")
 
-by_name = {df.name: df for df in flows.values()}
 print(f"{'dataflow':12s} {'perf':>6s} {'area':>7s} {'power':>7s}  mesh schedule")
 for r in sorted(front, key=lambda r: -r.normalized_perf)[:10]:
-    df = by_name.get(r.dataflow_name)
-    sched = schedule_from_comm_plan(plan.comm_plan_for(df)) if df else "?"
+    sched = schedule_from_comm_plan(plan.comm_plan_for(df_of[id(r)]))
     print(f"{r.dataflow_name:12s} {r.normalized_perf:6.3f} "
           f"{r.area_units:7.0f} {r.power_mw:6.1f}mW  {sched}")
+
+# compile the frontier winner: plan -> executable (shrunk bounds so the
+# python loop-nest oracle used for validation stays fast)
+best = min(front, key=lambda r: r.cycles)
+df = df_of[id(best)]
+small = g.with_bounds(m=16, n=16, k=16)
+kern = rcompile.lower(small, stt.apply_stt(small, df.selected, df.T),
+                      interpret=True, validate=True)
+print(f"\ncompiled frontier winner {df.name}: template={kern.template} "
+      f"blocks={kern.blocks} validated={kern.validated}")
 
 print("\nReading: MMT (multicast) = SUMMA all-gather matmul; "
       "SST (systolic) = Cannon ppermute rings; STS/TSS = ring "

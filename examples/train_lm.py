@@ -53,6 +53,10 @@ def main() -> None:
                   ckpt_dir=args.ckpt_dir),
     )
     out = driver.run()
+    if not out["metrics"]:
+        print(f"nothing to do: checkpoint in {args.ckpt_dir} is already at "
+              f"step {args.steps}; pass a fresh --ckpt-dir to retrain")
+        return
     print("\nstep   loss     lr")
     for m in out["metrics"]:
         print(f"{m['step']:5d}  {m['loss']:.4f}  {m['lr']:.2e}")

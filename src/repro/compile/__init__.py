@@ -1,0 +1,22 @@
+"""TensorLib compile pipeline: (TensorAlgebra, Dataflow) -> executable.
+
+Public API:
+    lower               — plan + GEMM-ize + tile + cache -> CompiledKernel
+    gemmize / GemmForm  — algebra lowering onto the GEMM templates
+    default_dataflow    — output-stationary STT over the first three loops
+    cache_info / cache_clear — compile-cache introspection
+
+The paper's pipeline is ``algebra + STT -> dataflow -> hardware``; this
+package is the last arrow on TPU: the dataflow classification selects a
+Pallas template (core/plan.py), the algebra is lowered onto that
+template's GEMM interface (lowering.py), and the shared tile chooser
+(core/tiling.py) fixes the block sizes the cost model already priced.
+"""
+from .lowering import GemmForm, gemmize
+from .pipeline import (CompiledKernel, VALIDATE_MACS_LIMIT, cache_clear,
+                       cache_info, default_dataflow, lower)
+
+__all__ = [
+    "CompiledKernel", "GemmForm", "VALIDATE_MACS_LIMIT",
+    "cache_clear", "cache_info", "default_dataflow", "gemmize", "lower",
+]

@@ -1,0 +1,185 @@
+"""Algebra lowering: GEMM-ize every Table II tensor algebra.
+
+TensorLib's reuse argument (paper §V) is that a small set of hardware
+templates covers every tensor algebra.  On the TPU retarget the templates
+are the three Pallas GEMM kernels in ``kernels/stt_gemm.py`` — so to make
+*every* ``get_algebra`` name executable the non-GEMM algebras must be
+expressed as one 2-D matmul plus cheap data-layout prep:
+
+    gemm            C = A @ B^T                        (transpose)
+    batched_gemv    block-diagonal lhs over the batch  (batch folding)
+    conv2d          im2col patches x reshaped weights  (paper's conv = GEMM)
+    depthwise_conv  im2col + per-channel block-diagonal weights
+    mttkrp          mode-1 unfolding x Khatri-Rao product
+    ttmc            mode-1 unfolding x Kronecker product
+
+Each lowering yields a :class:`GemmForm`: the 2-D problem dims, which loop
+iterators each GEMM dim folds (so the STT tile choice maps onto Pallas
+block sizes), which algebra tensors feed the lhs/rhs (so VMEM residency
+from the KernelPlan maps onto the ``stationary`` operand), and
+prepare/finish callables that move operands into and out of matrix form.
+
+The prep work is pure jnp layout code (reshape/slice/broadcast) — the MACs
+all run inside the selected Pallas template, which is the point.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, FrozenSet, Mapping, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..core.algebra import TensorAlgebra
+
+
+Operands = Mapping[str, jax.Array]
+
+
+@dataclasses.dataclass(frozen=True)
+class GemmForm:
+    """A 2-D matmul view of a tensor algebra: out2d = lhs2d @ rhs2d."""
+
+    m: int
+    n: int
+    k: int
+    #: which loop iterators each GEMM dim folds, e.g. conv2d k = (c, p, q)
+    dim_loops: Mapping[str, Tuple[str, ...]]
+    #: algebra tensors feeding each matmul operand (residency mapping)
+    lhs_tensors: FrozenSet[str]
+    rhs_tensors: FrozenSet[str]
+    prepare: Callable[[Operands], Tuple[jax.Array, jax.Array]]
+    finish: Callable[[jax.Array], jax.Array]
+
+
+def _b(alg: TensorAlgebra, *names: str) -> Tuple[int, ...]:
+    return tuple(alg.bounds[alg.loop_index(nm)] for nm in names)
+
+
+def _im2col(a: jax.Array, y: int, x: int, p: int, q: int) -> jax.Array:
+    """(C, y+p-1, x+q-1) -> (C * p * q, y * x) patch matrix, C-major then
+    (p, q) — matching a (C, p, q)-ordered weight reshape."""
+    c = a.shape[0]
+    patches = jnp.stack([a[:, pp:pp + y, qq:qq + x]
+                         for pp in range(p) for qq in range(q)], axis=1)
+    return patches.reshape(c * p * q, y * x)
+
+
+def _block_diag_rows(rows: jax.Array) -> jax.Array:
+    """(B, K) -> (B, B*K) with row i equal to rows[i] placed in block i.
+
+    Folds a batch loop that indexes an operand *and* the output into the
+    contraction dimension: the zero blocks make cross-batch products
+    vanish, so one plain GEMM computes every batch at once.
+
+    Honesty note: the zero padding means the executed GEMM performs B x
+    the algebra's MACs (batched_gemv, depthwise_conv).  The cost model
+    prices the *algebra's* dataflow, not this dense realization — fine
+    for correctness-oriented execution, wasteful at production batch
+    sizes; ROADMAP has an open item to move the batch loop into the
+    Pallas grid instead.
+    """
+    b = rows.shape[0]
+    return (jnp.eye(b, dtype=rows.dtype)[:, :, None]
+            * rows[None, :, :]).reshape(b, -1)
+
+
+# ---------------------------------------------------------------------------
+# Per-algebra lowerings (Table II)
+# ---------------------------------------------------------------------------
+
+def _gemmize_gemm(alg: TensorAlgebra) -> GemmForm:
+    m, n, k = _b(alg, "m", "n", "k")
+    return GemmForm(
+        m, n, k,
+        {"m": ("m",), "n": ("n",), "k": ("k",)},
+        frozenset({"A"}), frozenset({"B"}),
+        prepare=lambda ops: (ops["A"], ops["B"].T),   # B is (n, k)
+        finish=lambda c: c)
+
+
+def _gemmize_batched_gemv(alg: TensorAlgebra) -> GemmForm:
+    m, n, k = _b(alg, "m", "n", "k")
+    return GemmForm(
+        m, n, m * k,
+        {"m": ("m",), "n": ("n",), "k": ("m", "k")},
+        frozenset({"B"}), frozenset({"A"}),
+        # C[m, n] = sum_k A[m, k, n] * B[m, k]: the batch loop m indexes
+        # both inputs and the output -> fold it into the contraction with a
+        # block-diagonal lhs.
+        prepare=lambda ops: (_block_diag_rows(ops["B"]),
+                             ops["A"].reshape(m * k, n)),
+        finish=lambda c: c)
+
+
+def _gemmize_conv2d(alg: TensorAlgebra) -> GemmForm:
+    k, c, y, x, p, q = _b(alg, "k", "c", "y", "x", "p", "q")
+    return GemmForm(
+        k, y * x, c * p * q,
+        {"m": ("k",), "n": ("y", "x"), "k": ("c", "p", "q")},
+        frozenset({"B"}), frozenset({"A"}),
+        prepare=lambda ops: (ops["B"].reshape(k, c * p * q),
+                             _im2col(ops["A"], y, x, p, q)),
+        finish=lambda o: o.reshape(k, y, x))
+
+
+def _gemmize_depthwise(alg: TensorAlgebra) -> GemmForm:
+    k, y, x, p, q = _b(alg, "k", "y", "x", "p", "q")
+    return GemmForm(
+        k, y * x, k * p * q,
+        {"m": ("k",), "n": ("y", "x"), "k": ("k", "p", "q")},
+        frozenset({"B"}), frozenset({"A"}),
+        # channel loop k indexes weights, activations and output -> fold it
+        # into the contraction (block-diagonal weights x im2col patches)
+        prepare=lambda ops: (_block_diag_rows(ops["B"].reshape(k, p * q)),
+                             _im2col(ops["A"], y, x, p, q)),
+        finish=lambda o: o.reshape(k, y, x))
+
+
+def _gemmize_mttkrp(alg: TensorAlgebra) -> GemmForm:
+    i, j, k, l = _b(alg, "i", "j", "k", "l")
+    return GemmForm(
+        i, j, k * l,
+        {"m": ("i",), "n": ("j",), "k": ("k", "l")},
+        frozenset({"A"}), frozenset({"B", "C"}),
+        # D = A_(1) @ (B Khatri-Rao C): mode-1 unfolding of A against the
+        # column-wise Khatri-Rao product of the factor matrices
+        prepare=lambda ops: (ops["A"].reshape(i, k * l),
+                             (ops["B"][:, None, :]
+                              * ops["C"][None, :, :]).reshape(k * l, j)),
+        finish=lambda d: d)
+
+
+def _gemmize_ttmc(alg: TensorAlgebra) -> GemmForm:
+    i, j, k, l, m = _b(alg, "i", "j", "k", "l", "m")
+    return GemmForm(
+        i, j * k, l * m,
+        {"m": ("i",), "n": ("j", "k"), "k": ("l", "m")},
+        frozenset({"A"}), frozenset({"B", "C"}),
+        # D_(1) = A_(1) @ (B Kronecker C): Tucker-style chain contraction
+        prepare=lambda ops: (ops["A"].reshape(i, l * m),
+                             (ops["B"][:, None, :, None]
+                              * ops["C"][None, :, None, :]
+                              ).reshape(l * m, j * k)),
+        finish=lambda d: d.reshape(i, j, k))
+
+
+_LOWERINGS: Dict[str, Callable[[TensorAlgebra], GemmForm]] = {
+    "gemm": _gemmize_gemm,
+    "batched_gemv": _gemmize_batched_gemv,
+    "conv2d": _gemmize_conv2d,
+    "depthwise_conv": _gemmize_depthwise,
+    "mttkrp": _gemmize_mttkrp,
+    "ttmc": _gemmize_ttmc,
+}
+
+
+def gemmize(alg: TensorAlgebra) -> GemmForm:
+    """Lower any registry algebra to a single-GEMM form (bounds-aware)."""
+    try:
+        builder = _LOWERINGS[alg.name]
+    except KeyError:
+        raise NotImplementedError(
+            f"no GEMM lowering registered for algebra {alg.name!r}; "
+            f"known: {sorted(_LOWERINGS)}") from None
+    return builder(alg)

@@ -9,7 +9,7 @@ Public API:
     dse.enumerate_dataflows / sweep        — design-space exploration
     tpu.V5E / RooflineTerms                — target-hardware roofline model
 """
-from . import algebra, costmodel, dse, linalg, plan, stt, tpu
+from . import algebra, costmodel, dse, linalg, plan, stt, tiling, tpu
 from .algebra import PAPER_ALGEBRAS, TensorAlgebra, get_algebra
 from .costmodel import ArrayConfig, CostReport, PaperCycleModel
 from .plan import CommPlan, ExecutionPlan, KernelPlan, plan_for
@@ -17,7 +17,7 @@ from .stt import Dataflow, DataflowClass, InvalidSTT, apply_stt, simulate, stt_f
 from .tpu import V5E, RooflineTerms, TpuSpec
 
 __all__ = [
-    "algebra", "costmodel", "dse", "linalg", "plan", "stt", "tpu",
+    "algebra", "costmodel", "dse", "linalg", "plan", "stt", "tiling", "tpu",
     "PAPER_ALGEBRAS", "TensorAlgebra", "get_algebra",
     "ArrayConfig", "CostReport", "PaperCycleModel",
     "CommPlan", "ExecutionPlan", "KernelPlan", "plan_for",

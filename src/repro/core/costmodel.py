@@ -28,27 +28,10 @@ import dataclasses
 import math
 from typing import Dict, List, Optional, Sequence, Tuple
 
-from . import linalg
+from . import linalg, tiling
 from .algebra import TensorAlgebra
 from .stt import Dataflow, DataflowClass
-
-
-@dataclasses.dataclass(frozen=True)
-class ArrayConfig:
-    """The paper's evaluation hardware (§VI-A)."""
-
-    pe_dims: Tuple[int, int] = (16, 16)
-    freq_mhz: float = 320.0
-    onchip_gbps: float = 32.0
-    elem_bytes: int = 2            # INT16 for the DSE experiments
-
-    @property
-    def n_pes(self) -> int:
-        return self.pe_dims[0] * self.pe_dims[1]
-
-    @property
-    def bytes_per_cycle(self) -> float:
-        return self.onchip_gbps * 1e9 / (self.freq_mhz * 1e6)
+from .tiling import ArrayConfig  # re-export: historic home of ArrayConfig
 
 
 @dataclasses.dataclass
@@ -71,28 +54,11 @@ class CostReport:
 
 
 # ---------------------------------------------------------------------------
-# Geometry helpers
+# Geometry helpers — shared with the compiler, see core/tiling.py
 # ---------------------------------------------------------------------------
 
-def _row_extent(row: Sequence, tile: Sequence[int]) -> int:
-    """Extent of a linear form over the box [0, tile_j) — exact for boxes."""
-    hi = 0
-    lo = 0
-    for coef, b in zip(row, tile):
-        c = int(coef)
-        if c > 0:
-            hi += c * (b - 1)
-        elif c < 0:
-            lo += c * (b - 1)
-    return hi - lo + 1
-
-
-def _is_unit_row(row: Sequence) -> Optional[int]:
-    """Return the column index if the row is +/- a unit vector, else None."""
-    nz = [j for j, v in enumerate(row) if v != 0]
-    if len(nz) == 1 and abs(int(row[nz[0]])) == 1:
-        return nz[0]
-    return None
+_row_extent = tiling.row_extent
+_is_unit_row = tiling.is_unit_row
 
 
 # ---------------------------------------------------------------------------
@@ -106,41 +72,9 @@ class PaperCycleModel:
     # -- tiling -------------------------------------------------------------
     def _choose_tile(self, alg: TensorAlgebra, df: Dataflow
                      ) -> Tuple[List[int], Tuple[int, int], float]:
-        """Tile the selected loops so the PE footprint fits the array.
-
-        Returns (tile bounds for selected loops, packed parallel copies per
-        space dim, spatial utilization).
-        """
-        cols = [alg.loop_index(s) for s in df.selected]
-        bounds = [alg.bounds[c] for c in cols]
-        T = df.T
-        n_space = df.n_space
-        P = self.cfg.pe_dims
-
-        tile = list(bounds)
-        # Shrink loops (time-loop last) until every space extent fits.
-        space_rows = [T[i] for i in range(n_space)]
-        order = sorted(range(len(tile)),
-                       key=lambda j: sum(abs(int(r[j])) for r in space_rows),
-                       reverse=True)
-        for i, r in enumerate(space_rows):
-            while _row_extent(r, tile) > P[i]:
-                j = next(jj for jj in order if int(r[jj]) != 0 and tile[jj] > 1)
-                tile[j] -= 1
-
-        # Packing: if a unit space row's loop bound is below the array dim,
-        # replicate the tile along that dim (the paper's p=3 -> 15 rows).
-        copies = [1, 1]
-        for i, r in enumerate(space_rows):
-            j = _is_unit_row(r)
-            ext = _row_extent(r, tile)
-            if j is not None and ext < P[i]:
-                copies[i] = max(1, P[i] // ext)
-        util_num = 1.0
-        for i, r in enumerate(space_rows):
-            ext = _row_extent(r, tile)
-            util_num *= min(P[i], ext * copies[i]) / P[i]
-        return tile, (copies[0], copies[1]), util_num
+        """Delegates to the shared chooser (core/tiling.py) so the compiler
+        and the cost model price/execute with identical tiles."""
+        return tiling.choose_tile(alg, df, self.cfg.pe_dims)
 
     # -- traffic ------------------------------------------------------------
     def _tile_traffic(self, alg: TensorAlgebra, df: Dataflow,

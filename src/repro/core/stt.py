@@ -25,6 +25,7 @@ from __future__ import annotations
 
 import dataclasses
 import enum
+import functools
 import itertools
 from fractions import Fraction
 from typing import Dict, List, Optional, Sequence, Tuple
@@ -193,6 +194,37 @@ class InvalidSTT(ValueError):
     pass
 
 
+@functools.lru_cache(maxsize=None)
+def selection_nullspaces(alg: TensorAlgebra, selected: Tuple[str, ...]
+                         ) -> Tuple[Tuple[str, bool, Tuple[Vec, ...]], ...]:
+    """Per-tensor ``(name, is_output, null(A_sel))`` for one loop selection.
+
+    The nullspace of the selected-loop access matrix does *not* depend on T
+    — only its image under T does — so during design-space enumeration the
+    (rref-heavy) nullspace computation is shared across every candidate T
+    for a selection.  ``TensorAlgebra`` is a frozen dataclass of hashable
+    tuples, so memoization on the algebra itself is exact.
+    """
+    cols = [alg.loop_index(s) for s in selected]
+    out = []
+    for t in alg.tensors:
+        a_sel = linalg.submatrix_cols(t.access, cols)
+        out.append((t.name, t.is_output, tuple(linalg.nullspace(a_sel))))
+    return tuple(out)
+
+
+@functools.lru_cache(maxsize=None)
+def classify_reuse_cached(basis: Tuple[Vec, ...], n_space: int,
+                          is_output: bool) -> TensorDataflow:
+    """Memoized ``classify_reuse``: keyed on the transformed reuse basis.
+
+    Many distinct T matrices induce the same space-time reuse basis; the
+    rank-2 sub-case analysis (hyperplane intersections, span tests) then
+    runs once per distinct basis instead of once per T.
+    """
+    return classify_reuse(list(basis), n_space, is_output)
+
+
 def apply_stt(alg: TensorAlgebra, selected: Sequence[str],
               T: Mat) -> Dataflow:
     """Run TensorLib's dataflow-generation step (paper Fig. 2, left half).
@@ -207,17 +239,14 @@ def apply_stt(alg: TensorAlgebra, selected: Sequence[str],
         raise InvalidSTT(f"T must be {k}x{k} for {k} selected loops")
     if linalg.det(T) == 0:
         raise InvalidSTT("T must be full rank (one-to-one space-time mapping)")
-    cols = [alg.loop_index(s) for s in selected]
     n_space = k - 1
 
     out: List[TensorDataflow] = []
-    for t in alg.tensors:
-        a_sel = linalg.submatrix_cols(t.access, cols)
-        null = linalg.nullspace(a_sel)
+    for name, is_output, null in selection_nullspaces(alg, tuple(selected)):
         # reuse subspace in space-time coordinates: R = T · null(A_sel)
-        basis = [linalg.integerize(linalg.matvec(T, v)) for v in null]
-        df = classify_reuse(basis, n_space, t.is_output)
-        out.append(dataclasses.replace(df, tensor=t.name))
+        basis = tuple(linalg.integerize(linalg.matvec(T, v)) for v in null)
+        df = classify_reuse_cached(basis, n_space, is_output)
+        out.append(dataclasses.replace(df, tensor=name))
     return Dataflow(alg.name, tuple(selected), T, tuple(out))
 
 

@@ -1,0 +1,114 @@
+"""Shared tile-size selection for cost model and compiler.
+
+``choose_tile`` used to be a private method of ``PaperCycleModel``; the
+compile pipeline (``repro.compile``) needs the *same* tile decision so the
+blocks a generated kernel runs with are the blocks the cost model priced.
+Factoring it here is what keeps the two from drifting (ISSUE 1 tentpole
+item 1): the cost model delegates to this module, and so does
+``compile.lower``.
+
+Also home to ``ArrayConfig`` (the paper's evaluation hardware, §VI-A) so
+that both layers share one notion of the array geometry and the VMEM
+budget used by the operand-stationary template's strip accumulator.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from .algebra import TensorAlgebra
+from .stt import Dataflow
+
+
+@dataclasses.dataclass(frozen=True)
+class ArrayConfig:
+    """The paper's evaluation hardware (§VI-A) + TPU VMEM budget (D1)."""
+
+    pe_dims: Tuple[int, int] = (16, 16)
+    freq_mhz: float = 320.0
+    onchip_gbps: float = 32.0
+    elem_bytes: int = 2            # INT16 for the DSE experiments
+    #: per-core VMEM available to kernel scratch (TPU ~16 MB/core); caps the
+    #: operand-stationary strip accumulator, see kernels/stt_gemm.py.
+    vmem_budget_bytes: int = 16 * 1024 * 1024
+
+    @property
+    def n_pes(self) -> int:
+        return self.pe_dims[0] * self.pe_dims[1]
+
+    @property
+    def bytes_per_cycle(self) -> float:
+        return self.onchip_gbps * 1e9 / (self.freq_mhz * 1e6)
+
+
+def row_extent(row: Sequence, tile: Sequence[int]) -> int:
+    """Extent of a linear form over the box [0, tile_j) — exact for boxes."""
+    hi = 0
+    lo = 0
+    for coef, b in zip(row, tile):
+        c = int(coef)
+        if c > 0:
+            hi += c * (b - 1)
+        elif c < 0:
+            lo += c * (b - 1)
+    return hi - lo + 1
+
+
+def is_unit_row(row: Sequence) -> Optional[int]:
+    """Return the column index if the row is +/- a unit vector, else None."""
+    nz = [j for j, v in enumerate(row) if v != 0]
+    if len(nz) == 1 and abs(int(row[nz[0]])) == 1:
+        return nz[0]
+    return None
+
+
+def choose_tile(alg: TensorAlgebra, df: Dataflow,
+                pe_dims: Tuple[int, int] = (16, 16)
+                ) -> Tuple[List[int], Tuple[int, int], float]:
+    """Tile the selected loops so the PE footprint fits the array.
+
+    Returns (tile bounds for selected loops, packed parallel copies per
+    space dim, spatial utilization).
+    """
+    cols = [alg.loop_index(s) for s in df.selected]
+    bounds = [alg.bounds[c] for c in cols]
+    T = df.T
+    n_space = df.n_space
+    P = pe_dims
+
+    tile = list(bounds)
+    # Shrink loops (time-loop last) until every space extent fits.
+    space_rows = [T[i] for i in range(n_space)]
+    order = sorted(range(len(tile)),
+                   key=lambda j: sum(abs(int(r[j])) for r in space_rows),
+                   reverse=True)
+    for i, r in enumerate(space_rows):
+        while row_extent(r, tile) > P[i]:
+            j = next(jj for jj in order if int(r[jj]) != 0 and tile[jj] > 1)
+            tile[j] -= 1
+
+    # Packing: if a unit space row's loop bound is below the array dim,
+    # replicate the tile along that dim (the paper's p=3 -> 15 rows).
+    copies = [1, 1]
+    for i, r in enumerate(space_rows):
+        j = is_unit_row(r)
+        ext = row_extent(r, tile)
+        if j is not None and ext < P[i]:
+            copies[i] = max(1, P[i] // ext)
+    util_num = 1.0
+    for i, r in enumerate(space_rows):
+        ext = row_extent(r, tile)
+        util_num *= min(P[i], ext * copies[i]) / P[i]
+    return tile, (copies[0], copies[1]), util_num
+
+
+def tile_by_loop(alg: TensorAlgebra, df: Dataflow,
+                 pe_dims: Tuple[int, int] = (16, 16)) -> Dict[str, int]:
+    """Per-loop tile bounds: chosen tile for selected loops, full bound for
+    the sequential (outer) loops.  This is the form the compiler consumes
+    when mapping loop tiles onto GEMM block sizes."""
+    tile, _, _ = choose_tile(alg, df, pe_dims)
+    out = {name: alg.bounds[i] for i, name in enumerate(alg.loops)}
+    for name, t in zip(df.selected, tile):
+        out[name] = t
+    return out

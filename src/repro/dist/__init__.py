@@ -1,0 +1,19 @@
+"""Mesh-level realization of generated CommPlans (DESIGN.md level 2).
+
+The compile pipeline (``repro.compile``) executes the intra-chip
+KernelPlan; this package executes the *inter-chip* half of a generated
+accelerator: each ``TensorCommPlan.kind`` maps to a shard_map collective
+(all_gather = multicast wires, psum = reduction tree, ppermute ring =
+systolic nearest-neighbour links, shard = stationary residency).
+
+Modules:
+    schedules — CommPlan -> named collective schedule (SUMMA / Cannon / ...)
+    engine    — shard_map GEMM realizations of the classic schedules
+    selftest  — executes every schedule on fake devices vs the jnp oracle
+                (run as ``python -m repro.dist.selftest`` with
+                ``--xla_force_host_platform_device_count=8``)
+"""
+from . import engine, schedules
+from .schedules import schedule_from_comm_plan
+
+__all__ = ["engine", "schedules", "schedule_from_comm_plan"]

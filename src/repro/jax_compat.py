@@ -1,0 +1,83 @@
+"""Version compatibility shims for the jax mesh/sharding API.
+
+The model substrate targets the jax 0.8 sharding-in-types API
+(``jax.sharding.get_abstract_mesh`` / ``set_mesh``); older releases (the
+seed image ships 0.4.37) spell those ``jax._src.mesh.get_abstract_mesh``
+and the ``with mesh:`` resource env + ``set_abstract_mesh``.  Same
+pattern as kernels/pallas_compat.py for ``pltpu.CompilerParams``.
+"""
+from __future__ import annotations
+
+import contextlib
+
+import jax
+
+
+def get_abstract_mesh():
+    """The ambient abstract mesh; an *empty* AbstractMesh (jax 0.8
+    semantics — ``axis_names == ()``) when outside any mesh context."""
+    fn = getattr(jax.sharding, "get_abstract_mesh", None)
+    if fn is not None:
+        return fn()
+    from jax._src import mesh as mesh_lib
+    m = mesh_lib.get_abstract_mesh()
+    if getattr(m, "axis_names", None):
+        return m
+    return mesh_lib.AbstractMesh(())
+
+
+def shard_map(*args, **kwargs):
+    """``jax.shard_map`` (jax 0.8 top-level name) with the
+    ``jax.experimental.shard_map`` fallback for older releases, where the
+    replication-check kwarg was still called ``check_rep``."""
+    fn = getattr(jax, "shard_map", None)
+    if fn is None:
+        from jax.experimental.shard_map import shard_map as fn
+        if "check_vma" in kwargs:
+            kwargs["check_rep"] = kwargs.pop("check_vma")
+    return fn(*args, **kwargs)
+
+
+_BARRIER_HAS_AD = None
+
+
+def optimization_barrier(x):
+    """``jax.lax.optimization_barrier``, degrading to identity on jax
+    releases whose barrier has no differentiation rule.  The barrier only
+    pins XLA scheduling (which collective runs on which value), so
+    dropping it is semantically safe — just potentially slower."""
+    global _BARRIER_HAS_AD
+    if _BARRIER_HAS_AD is None:
+        try:
+            jax.grad(lambda v: jax.lax.optimization_barrier(v))(1.0)
+            _BARRIER_HAS_AD = True
+        except NotImplementedError:
+            _BARRIER_HAS_AD = False
+    return jax.lax.optimization_barrier(x) if _BARRIER_HAS_AD else x
+
+
+def make_mesh(shape, axes):
+    """``jax.make_mesh`` with explicit Auto axis types where the API has
+    them (jax 0.8 sharding-in-types); plain make_mesh otherwise — Auto is
+    the older default, so behavior matches."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None:
+        return jax.make_mesh(shape, axes,
+                             axis_types=(axis_type.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes)
+
+
+@contextlib.contextmanager
+def set_mesh(mesh):
+    """``jax.sharding.set_mesh`` with a fallback for older jax: enter the
+    legacy resource env (so bare-PartitionSpec sharding constraints
+    resolve) *and* publish the abstract mesh (so ``get_abstract_mesh``
+    callers see the axis names)."""
+    sm = getattr(jax.sharding, "set_mesh", None)
+    if sm is not None:
+        with sm(mesh):
+            yield mesh
+        return
+    from jax._src import mesh as mesh_lib
+    with mesh, mesh_lib.set_abstract_mesh(mesh.abstract_mesh):
+        yield mesh

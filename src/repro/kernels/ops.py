@@ -32,12 +32,21 @@ def _pad_to(x: jax.Array, mults: tuple) -> jax.Array:
 # ---------------------------------------------------------------------------
 
 @functools.partial(jax.jit, static_argnames=(
-    "template", "stationary", "bm", "bn", "bk", "backend", "interpret"))
+    "template", "stationary", "bm", "bn", "bk", "backend", "interpret",
+    "vmem_budget"))
 def stt_matmul(a: jax.Array, b: jax.Array, *, template: str = "output_stationary",
                stationary: str = "B", bm: int = 128, bn: int = 128,
                bk: int = 128, backend: str = "pallas",
-               interpret: bool = False) -> jax.Array:
-    """C = A @ B with the Pallas template selected by an STT dataflow."""
+               interpret: bool = False,
+               vmem_budget: Optional[int] = _gemm.DEFAULT_VMEM_BUDGET
+               ) -> jax.Array:
+    """C = A @ B with the Pallas template selected by an STT dataflow.
+
+    ``vmem_budget`` caps the operand-stationary strip accumulator: when the
+    (m, bn) fp32 strip would not fit, the call falls back to the
+    output-stationary template (same math, block-local residency) instead
+    of erroring — the compile pipeline relies on this safety net.
+    """
     if backend == "xla":
         return _ref.matmul_ref(a, b)
     m, k = a.shape
@@ -45,12 +54,20 @@ def stt_matmul(a: jax.Array, b: jax.Array, *, template: str = "output_stationary
     bm, bn, bk = min(bm, m), min(bn, n), min(bk, k)
     ap = _pad_to(a, (bm, bk))
     bp = _pad_to(b, (bk, bn))
+    if template == "operand_stationary" and vmem_budget is not None:
+        # the strip extent follows the *streamed-output* dimension: M for
+        # stationary B, N for stationary A (transposition symmetry)
+        strip_len = ap.shape[0] if stationary == "B" else bp.shape[1]
+        strip_bn = bn if stationary == "B" else bm
+        if _gemm.operand_stationary_strip_bytes(strip_len, strip_bn) \
+                > vmem_budget:
+            template = "output_stationary"
     kw = dict(bm=bm, bn=bn, bk=bk, interpret=interpret)
     if template == "output_stationary":
         out = _gemm.matmul_output_stationary(ap, bp, **kw)
     elif template == "operand_stationary":
         out = _gemm.matmul_operand_stationary(ap, bp, stationary=stationary,
-                                              **kw)
+                                              vmem_budget=vmem_budget, **kw)
     elif template in ("reduction_tree", "streaming"):
         kw.pop("bk")
         out = _gemm.matmul_reduction_tree(ap, bp, **kw)

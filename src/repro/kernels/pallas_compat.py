@@ -1,0 +1,13 @@
+"""Version compatibility shims for jax.experimental.pallas.tpu.
+
+The Pallas TPU API renamed ``TPUCompilerParams`` to ``CompilerParams``
+between jax releases; the kernels target the new name but must run on
+images that ship the old one.  Centralizing the lookup here keeps every
+kernel file on one import instead of four copies of the getattr dance.
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) \
+    or getattr(pltpu, "TPUCompilerParams")

@@ -21,6 +21,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from . import pallas_compat as _compat
+
 
 def _ssd_kernel(da_ref, x_ref, b_ref, c_ref, y_ref, state_ref, *, chunk: int):
     ci = pl.program_id(1)
@@ -82,7 +84,7 @@ def ssd_scan(xdt: jax.Array, da: jax.Array, b: jax.Array, c: jax.Array, *,
         out_specs=pl.BlockSpec((1, chunk, p), lambda i, ci: (i, ci, 0)),
         out_shape=jax.ShapeDtypeStruct((bh, l, p), xdt.dtype),
         scratch_shapes=[pltpu.VMEM((n, p), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_compat.CompilerParams(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(da, xdt, b, c)

@@ -32,14 +32,25 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from . import pallas_compat as _compat
+
 
 DEFAULT_BLOCK = 128
+#: per-core VMEM available for kernel scratch (TPU ~16 MB/core); the
+#: operand-stationary strip accumulator must fit in it.
+DEFAULT_VMEM_BUDGET = 16 * 1024 * 1024
 
 
 def _validate(m, n, k, bm, bn, bk):
     if m % bm or n % bn or k % bk:
         raise ValueError(f"shape ({m},{n},{k}) not divisible by blocks "
                          f"({bm},{bn},{bk}); ops.stt_matmul pads first")
+
+
+def operand_stationary_strip_bytes(m: int, bn: int) -> int:
+    """VMEM footprint of the (m, bn) fp32 strip accumulator the
+    operand-stationary template allocates (see matmul_operand_stationary)."""
+    return m * bn * 4
 
 
 # ---------------------------------------------------------------------------
@@ -76,7 +87,7 @@ def matmul_output_stationary(a: jax.Array, b: jax.Array, *,
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
         out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_compat.CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(a, b)
@@ -109,21 +120,37 @@ def matmul_operand_stationary(a: jax.Array, b: jax.Array, *,
                               stationary: str = "B",
                               bm: int = DEFAULT_BLOCK, bn: int = DEFAULT_BLOCK,
                               bk: int = DEFAULT_BLOCK,
-                              out_dtype=None, interpret: bool = False
+                              out_dtype=None, interpret: bool = False,
+                              vmem_budget: Optional[int] = DEFAULT_VMEM_BUDGET
                               ) -> jax.Array:
     """``stationary='B'``: grid (n, k, m) keeps the B block pinned while A
     streams (weight-stationary);  ``stationary='A'`` is the symmetric
     input-stationary template (implemented by transposition symmetry:
-    C^T = B^T A^T with B^T stationary)."""
+    C^T = B^T A^T with B^T stationary).
+
+    The strip accumulator scratch is (m, bn) fp32 — a VMEM residency that
+    grows with the *full* M extent, not a block.  ``vmem_budget`` bounds it
+    (pass None to skip the check); ``ops.stt_matmul`` auto-falls-back to the
+    output-stationary template instead of tripping this error.
+    """
     from jax.experimental.pallas import tpu as pltpu
     if stationary == "A":
         return matmul_operand_stationary(
             b.T, a.T, stationary="B", bm=bn, bn=bm, bk=bk,
-            out_dtype=out_dtype, interpret=interpret).T
+            out_dtype=out_dtype, interpret=interpret,
+            vmem_budget=vmem_budget).T
     if stationary != "B":
         raise ValueError(stationary)
     (m, k), (_, n) = a.shape, b.shape
     _validate(m, n, k, bm, bn, bk)
+    strip = operand_stationary_strip_bytes(m, bn)
+    if vmem_budget is not None and strip > vmem_budget:
+        raise ValueError(
+            f"operand-stationary strip accumulator needs {strip} bytes of "
+            f"VMEM ((m={m}) x (bn={bn}) x 4B) but the budget is "
+            f"{vmem_budget}; shrink bn, tile m outside the kernel, or use "
+            f"the output_stationary template (ops.stt_matmul falls back "
+            f"automatically)")
     out_dtype = out_dtype or a.dtype
     n_k = k // bk
     kernel = functools.partial(_ws_kernel, n_k=n_k, bm=bm,
@@ -137,7 +164,7 @@ def matmul_operand_stationary(a: jax.Array, b: jax.Array, *,
         out_specs=pl.BlockSpec((bm, bn), lambda j, kk, i: (i, j)),
         out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
         scratch_shapes=[pltpu.VMEM((m, bn), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_compat.CompilerParams(
             dimension_semantics=("parallel", "arbitrary", "arbitrary")),
         interpret=interpret,
     )(a, b)
@@ -168,7 +195,7 @@ def matmul_reduction_tree(a: jax.Array, b: jax.Array, *,
                   pl.BlockSpec((k, bn), lambda i, j: (0, j))],
         out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
         out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_compat.CompilerParams(
             dimension_semantics=("parallel", "parallel")),
         interpret=interpret,
     )(a, b)

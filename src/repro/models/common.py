@@ -22,6 +22,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from .. import jax_compat
+
 
 # ---------------------------------------------------------------------------
 # Parameter leaves with logical axes
@@ -172,7 +174,7 @@ def shard(x: jax.Array, *axes) -> jax.Array:
 
     This keeps one set of constraints valid across the 1-device test mesh,
     the 16x16 pod and the 2x16x16 multi-pod mesh."""
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = jax_compat.get_abstract_mesh()
     if mesh is None or not mesh.axis_names:
         return x
     names = dict(zip(mesh.axis_names, mesh.axis_sizes))
@@ -202,4 +204,4 @@ def shard_pinned(x: jax.Array, *axes) -> jax.Array:
     y = shard(x, *axes)
     if y is x:
         return x
-    return jax.lax.optimization_barrier(y)
+    return jax_compat.optimization_barrier(y)

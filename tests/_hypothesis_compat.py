@@ -1,0 +1,78 @@
+"""Minimal fallback for ``hypothesis`` when it is not installed.
+
+The property tests in this repo use a small, fixed subset of the hypothesis
+API: ``@given`` over ``st.integers`` / ``st.lists`` (with ``.map`` and
+``.filter``) plus ``@settings(max_examples=..., deadline=...)``.  This shim
+re-implements exactly that subset with a deterministic seeded RNG so the
+suite still exercises the properties (with less sophisticated shrinking and
+no database) on images without hypothesis.
+
+Usage in test modules:
+
+    try:
+        from hypothesis import given, settings, strategies as st
+    except ImportError:
+        from _hypothesis_compat import given, settings, st
+"""
+import random
+
+DEFAULT_MAX_EXAMPLES = 20
+_FILTER_ATTEMPTS = 10_000
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def map(self, fn):
+        return _Strategy(lambda rng: fn(self._draw(rng)))
+
+    def filter(self, pred):
+        def draw(rng):
+            for _ in range(_FILTER_ATTEMPTS):
+                v = self._draw(rng)
+                if pred(v):
+                    return v
+            raise RuntimeError("filter predicate rejected too many examples")
+        return _Strategy(draw)
+
+
+class st:
+    """Drop-in namespace mirroring ``hypothesis.strategies``."""
+
+    @staticmethod
+    def integers(min_value, max_value):
+        return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+    @staticmethod
+    def lists(elements, min_size=0, max_size=None):
+        hi = max_size if max_size is not None else min_size + 10
+        return _Strategy(
+            lambda rng: [elements._draw(rng)
+                         for _ in range(rng.randint(min_size, hi))])
+
+
+def settings(max_examples=DEFAULT_MAX_EXAMPLES, deadline=None, **_ignored):
+    def deco(fn):
+        fn._compat_max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(*strategies):
+    def deco(fn):
+        n = getattr(fn, "_compat_max_examples", DEFAULT_MAX_EXAMPLES)
+
+        # *args-only signature so pytest does not mistake the drawn
+        # parameters for fixtures.
+        def wrapper(*args, **kwargs):
+            rng = random.Random(0xC0FFEE)
+            for _ in range(n):
+                drawn = [s._draw(rng) for s in strategies]
+                fn(*args, *drawn, **kwargs)
+
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__module__ = fn.__module__
+        return wrapper
+    return deco

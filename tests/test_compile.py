@@ -1,0 +1,169 @@
+"""End-to-end compile pipeline: every registry algebra x named STTs must
+lower to an executable kernel matching the loop-nest oracle (ISSUE 1)."""
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from repro import compile as rcompile
+from repro.core import algebra, plan, stt, tiling
+from repro.kernels import ops, stt_gemm
+
+
+#: small bounds so alg.reference (python loop oracle) stays fast and the
+#: fp32 path is exact on integer operands
+SMALL_BOUNDS = {
+    "gemm": dict(m=8, n=8, k=8),
+    "batched_gemv": dict(m=4, k=8, n=8),
+    "conv2d": dict(k=8, c=4, y=6, x=6, p=3, q=3),
+    "depthwise_conv": dict(k=8, y=6, x=6, p=3, q=3),
+    "mttkrp": dict(i=8, j=8, k=4, l=4),
+    "ttmc": dict(i=4, j=4, k=4, l=4, m=4),
+}
+
+NAMED_STTS = ("identity", "output_stationary", "weight_stationary",
+              "input_stationary")
+
+
+def small(name):
+    return algebra.get_algebra(name, **SMALL_BOUNDS[name])
+
+
+# ---------------------------------------------------------------------------
+# The acceptance matrix: registry x named STTs, interpret mode vs oracle
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kind", NAMED_STTS)
+@pytest.mark.parametrize("name", sorted(algebra.PAPER_ALGEBRAS))
+def test_every_algebra_executes_through_pipeline(name, kind):
+    alg = small(name)
+    df = stt.apply_stt(alg, alg.loops[:3], stt.stt_from_name(kind))
+    kern = rcompile.lower(alg, df, interpret=True)
+    assert kern.validated          # small problem -> auto-validated
+    operands = alg.random_operands(seed=7)
+    got = np.asarray(kern(operands)).round().astype(np.int64)
+    want = alg.reference(operands)
+    np.testing.assert_array_equal(got, want)
+    # the template really is the plan's selection for this dataflow
+    assert kern.template == plan.kernel_plan_for(df).template
+
+
+def test_lowering_covers_whole_registry():
+    for name in algebra.PAPER_ALGEBRAS:
+        form = rcompile.gemmize(small(name))
+        alg = small(name)
+        assert form.m * form.n * form.k > 0
+        # every loop iterator is folded into exactly the dims it claims
+        folded = [l for dim in ("m", "n", "k") for l in form.dim_loops[dim]]
+        assert set(folded) <= set(alg.loops)
+
+
+def test_gemmize_unknown_algebra_raises():
+    bogus = algebra.gemm(4, 4, 4)
+    bogus = bogus.__class__(name="winograd", loops=bogus.loops,
+                            bounds=bogus.bounds, tensors=bogus.tensors)
+    with pytest.raises(NotImplementedError):
+        rcompile.gemmize(bogus)
+
+
+# ---------------------------------------------------------------------------
+# Compile cache
+# ---------------------------------------------------------------------------
+
+def test_cache_hits_on_repeat_lowering():
+    rcompile.cache_clear()
+    alg = small("gemm")
+    df = stt.apply_stt(alg, alg.loops, stt.stt_from_name("identity"))
+    k1 = rcompile.lower(alg, df, interpret=True)
+    before = rcompile.cache_info()
+    k2 = rcompile.lower(alg, df, interpret=True)
+    after = rcompile.cache_info()
+    assert k1 is k2
+    assert after["hits"] == before["hits"] + 1
+    assert after["misses"] == before["misses"]
+
+
+def test_cache_hit_honours_late_validate_request():
+    rcompile.cache_clear()
+    alg = small("gemm")
+    df = stt.apply_stt(alg, alg.loops, stt.stt_from_name("identity"))
+    k1 = rcompile.lower(alg, df, interpret=True, validate=False)
+    assert not k1.validated
+    k2 = rcompile.lower(alg, df, interpret=True, validate=True)
+    assert k2 is k1 and k2.validated
+
+
+def test_cache_distinguishes_shapes_dtype_interpret():
+    rcompile.cache_clear()
+    a1 = small("gemm")
+    a2 = a1.with_bounds(m=16)
+    df1 = stt.apply_stt(a1, a1.loops, stt.stt_from_name("identity"))
+    df2 = stt.apply_stt(a2, a2.loops, stt.stt_from_name("identity"))
+    k1 = rcompile.lower(a1, df1, interpret=True)
+    k2 = rcompile.lower(a2, df2, interpret=True)            # shapes differ
+    k3 = rcompile.lower(a1, df1, interpret=True, dtype=jnp.bfloat16,
+                        validate=False)                     # dtype differs
+    k4 = rcompile.lower(a1, df1, interpret=True, backend="xla")
+    assert len({id(k) for k in (k1, k2, k3, k4)}) == 4
+    assert rcompile.cache_info()["misses"] == 4
+
+
+def test_lower_rejects_foreign_dataflow():
+    g = small("gemm")
+    mt = small("mttkrp")
+    df = stt.apply_stt(mt, mt.loops[:3], stt.stt_from_name("identity"))
+    with pytest.raises(ValueError):
+        rcompile.lower(g, df, interpret=True)
+
+
+# ---------------------------------------------------------------------------
+# Tile chooser is shared between cost model and compiler
+# ---------------------------------------------------------------------------
+
+def test_blocks_come_from_shared_tile_chooser():
+    alg = algebra.gemm(256, 256, 256)
+    df = stt.apply_stt(alg, alg.loops, stt.stt_from_name("output_stationary"))
+    kern = rcompile.lower(alg, df, interpret=True, validate=False)
+    tile, _, _ = tiling.choose_tile(alg, df, kern.cfg.pe_dims)
+    per_loop = dict(zip(df.selected, tile))
+    assert kern.blocks == (per_loop["m"], per_loop["n"], per_loop["k"])
+    # and not the historic hard-coded 128 default
+    assert kern.blocks != (stt_gemm.DEFAULT_BLOCK,) * 3
+    # the cost model prices the same tile the compiler runs with
+    assert kern.cost_report().dataflow_name == df.name
+
+
+# ---------------------------------------------------------------------------
+# VMEM bound on the operand-stationary strip (satellite 2)
+# ---------------------------------------------------------------------------
+
+def test_operand_stationary_vmem_check_raises():
+    import jax
+    a = jnp.zeros((256, 32), jnp.float32)
+    b = jnp.zeros((32, 32), jnp.float32)
+    with pytest.raises(ValueError, match="VMEM"):
+        stt_gemm.matmul_operand_stationary(
+            a, b, bm=32, bn=32, bk=32, interpret=True,
+            vmem_budget=256 * 32 * 4 - 1)
+
+
+def test_stt_matmul_falls_back_to_output_stationary():
+    rng = np.random.default_rng(0)
+    a = jnp.asarray(rng.standard_normal((64, 32)), jnp.float32)
+    b = jnp.asarray(rng.standard_normal((32, 32)), jnp.float32)
+    # budget below the (64, 32) fp32 strip -> silently uses the
+    # output-stationary template; result must still be correct
+    got = ops.stt_matmul(a, b, template="operand_stationary",
+                         bm=32, bn=32, bk=32, interpret=True,
+                         vmem_budget=64 * 32 * 4 - 1)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(a) @ np.asarray(b),
+                               rtol=1e-4, atol=1e-3)
+
+
+def test_stt_matmul_within_budget_unchanged():
+    rng = np.random.default_rng(1)
+    a = jnp.asarray(rng.standard_normal((64, 32)), jnp.float32)
+    b = jnp.asarray(rng.standard_normal((32, 32)), jnp.float32)
+    got = ops.stt_matmul(a, b, template="operand_stationary",
+                         bm=32, bn=32, bk=32, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(a) @ np.asarray(b),
+                               rtol=1e-4, atol=1e-3)

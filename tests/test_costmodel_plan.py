@@ -165,3 +165,62 @@ class TestPlans:
         bg = algebra.batched_gemv()
         p = plan.plan_for(df_of(bg, MNK, "identity"))
         assert p.comm.by_tensor()["A"].kind == "stream"
+
+
+class TestParetoFront:
+    """Sort-based pareto_front (ISSUE 1 satellite): known front + oracle."""
+
+    @staticmethod
+    def _report(cycles, area, power, name="pt"):
+        return costmodel.CostReport(
+            dataflow_name=name, cycles=cycles, macs=0, peak_macs=0,
+            normalized_perf=0.0, utilization=0.0, bw_stall_factor=1.0,
+            fill_overhead_frac=0.0, traffic_bytes={},
+            area_units=area, power_mw=power)
+
+    def test_known_front(self):
+        r = self._report
+        pts = [
+            r(1, 5, 5, "a"),   # front: best cycles
+            r(1, 5, 5, "h"),   # exact duplicate of a: neither dominates
+            r(2, 4, 6, "b"),   # front: beats c on area, loses on power
+            r(2, 6, 4, "c"),   # front
+            r(2, 4, 6, "d"),   # duplicate of b -> front
+            r(3, 4, 6, "e"),   # dominated by b (same area/power, more cycles)
+            r(3, 9, 9, "f"),   # dominated by everything
+            r(2, 5, 5, "g"),   # dominated by a (equal area/power, cycles<)
+        ]
+        front = {p.dataflow_name for p in dse.pareto_front(pts)}
+        assert front == {"a", "h", "b", "c", "d"}
+        assert front == {p.dataflow_name
+                         for p in dse.pareto_front_reference(pts)}
+
+    def test_matches_reference_on_sweep(self):
+        g = algebra.gemm(128, 128, 128)
+        reports = dse.sweep(g, selections=[MNK])
+        fast = dse.pareto_front(reports)
+        slow = dse.pareto_front_reference(reports)
+        assert {id(r) for r in fast} == {id(r) for r in slow}
+        assert len(fast) >= 1
+
+
+class TestEnumerationFastPath:
+    """The cached enumeration must be indistinguishable from the original."""
+
+    def test_gemm_matches_reference(self):
+        g = algebra.gemm(64, 64, 64)
+        fast = dse.enumerate_dataflows(g, selections=[MNK])
+        slow = dse.enumerate_dataflows_reference(g, selections=[MNK])
+        assert set(fast) == set(slow)
+        for key in fast:
+            assert fast[key].signature == slow[key].signature
+            assert fast[key].T == slow[key].T     # same representative
+
+    def test_rank3_selection_skipped_not_crashing(self):
+        # conv2d with selection (c, p, q): the output C[k,y,x] has a rank-3
+        # reuse subspace for every T -> the selection is unbuildable and
+        # must be skipped silently by both paths
+        cv = algebra.conv2d(4, 4, 4, 4, 2, 2)
+        sel = [("c", "p", "q")]
+        assert dse.enumerate_dataflows(cv, selections=sel) == {}
+        assert dse.enumerate_dataflows_reference(cv, selections=sel) == {}

@@ -30,10 +30,12 @@ def test_serve_lm():
     assert "serve OK" in out
 
 
-def test_train_lm_short():
+def test_train_lm_short(tmp_path):
+    # fresh checkpoint dir each run: a leftover completed checkpoint would
+    # make the driver resume at the final step and train nothing
     out = run_example("train_lm.py", "--steps", "40", "--d-model", "64",
                       "--layers", "2", "--seq", "32", "--batch", "4",
-                      "--ckpt-dir", "/tmp/repro_ex_train")
+                      "--ckpt-dir", str(tmp_path / "ckpt"))
     assert "DECREASED" in out
 
 

@@ -6,7 +6,10 @@ import numpy as np
 import pytest
 import jax
 import jax.numpy as jnp
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                       # seed image lacks hypothesis
+    from _hypothesis_compat import given, settings, st
 
 from repro.core import algebra, stt, plan
 from repro.kernels import flash_attention as fa

@@ -130,10 +130,10 @@ from repro.launch import specs, hlo_analysis
 from repro.configs import get_config
 
 # miniature production mesh (2x4) standing in for (16x16)
-mesh = jax.make_mesh((2, 4), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+from repro import jax_compat
+mesh = jax_compat.make_mesh((2, 4), ("data", "model"))
 cell = specs.input_specs("granite-8b", "train_4k", mesh)
-with jax.sharding.set_mesh(mesh):
+with jax_compat.set_mesh(mesh):
     lowered = jax.jit(cell.fn, in_shardings=cell.in_shardings,
                       out_shardings=cell.out_shardings,
                       donate_argnums=cell.donate).lower(*cell.args)
@@ -162,8 +162,8 @@ def test_input_specs_all_cells_constructible():
     import jax
 
     from repro.launch import specs
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro import jax_compat
+    mesh = jax_compat.make_mesh((1, 1), ("data", "model"))
     n = 0
     for arch, shape in specs.all_cells():
         cell = specs.input_specs(arch, shape, mesh)

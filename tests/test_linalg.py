@@ -2,7 +2,10 @@
 from fractions import Fraction
 
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                       # seed image lacks hypothesis
+    from _hypothesis_compat import given, settings, st
 
 from repro.core import linalg
 

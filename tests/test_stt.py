@@ -2,7 +2,10 @@
 import itertools
 
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                       # seed image lacks hypothesis
+    from _hypothesis_compat import given, settings, st
 
 from repro.core import algebra, linalg, stt
 from repro.core.stt import DataflowClass as DC
