@@ -2,17 +2,17 @@
 tensor algebra, on the paper's 16x16 / 320 MHz / 32 GB/s setup.
 
 Validates the paper's qualitative claims (each printed row notes the claim
-it supports).  Each case now goes through the compile pipeline
-(``repro.compile.lower``): the CostReport comes from the *lowered* kernel,
-so the tile the model prices is the tile the kernel would execute with —
-and ``--execute`` additionally runs every case end-to-end (shrunk bounds,
-interpret mode) against the loop-nest oracle.
+it supports).  Each case goes through the front door (``repro.generate``):
+the CostReport comes from the *generated* accelerator, so the tile the
+model prices is the tile the kernel would execute with — and ``--execute``
+additionally runs every case end-to-end (shrunk bounds, interpret mode)
+against the loop-nest oracle.
 """
 from __future__ import annotations
 
 import argparse
 
-from repro import compile as rcompile
+import repro
 from repro.core import algebra, stt
 
 
@@ -60,11 +60,11 @@ def run(execute: bool = False) -> list:
     for name, bounds, sel, kind in CASES:
         alg = algebra.get_algebra(name, **bounds)
         df = stt.apply_stt(alg, sel, stt.stt_from_name(kind))
-        kern = rcompile.lower(alg, df, interpret=True, validate=False)
-        r = kern.cost_report()
+        acc = repro.generate(alg, df, interpret=True, validate=False)
+        r = acc.cost_report()
         row = {
             "algebra": name, "dataflow": df.name,
-            "template": kern.template,
+            "template": acc.template,
             "normalized_perf": round(r.normalized_perf, 4),
             "utilization": round(r.utilization, 4),
             "bw_stall": round(r.bw_stall_factor, 2),
@@ -74,7 +74,7 @@ def run(execute: bool = False) -> list:
         if execute:
             small = algebra.get_algebra(name, **EXEC_BOUNDS[name])
             sdf = stt.apply_stt(small, sel, stt.stt_from_name(kind))
-            err = rcompile.lower(small, sdf, interpret=True,
+            err = repro.generate(small, sdf, interpret=True,
                                  validate=False).validate()
             row["exec_max_err"] = err
         rows.append(row)

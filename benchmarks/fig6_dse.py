@@ -11,8 +11,8 @@ The enumeration now runs on the DSE fast path (per-selection nullspace
 caching, duplicate-basis short-circuiting — ISSUE 1) and the benchmark
 times it; ``--baseline`` additionally times the original per-T pipeline
 for an A/B speedup print.  The best pareto point is then carried through
-``repro.compile.lower`` to a validated executable — plan to kernel, not
-just plan to scatter plot.
+the front door (``repro.generate``) to a validated accelerator — plan to
+kernel, not just plan to scatter plot.
 """
 from __future__ import annotations
 
@@ -20,7 +20,7 @@ import argparse
 import time
 from collections import Counter
 
-from repro import compile as rcompile
+import repro
 from repro.core import algebra, costmodel, dse, stt
 
 
@@ -53,7 +53,7 @@ def summarize(name, reports, good):
 
 
 def lower_winner(alg, front, df_of):
-    """Carry the best pareto point through the compile pipeline at shrunk
+    """Carry the best pareto point through the front door at shrunk
     bounds: the generated accelerator must actually run.  ``df_of`` maps
     report identity -> Dataflow (names are not unique across a sweep)."""
     if not front:
@@ -65,9 +65,9 @@ def lower_winner(alg, front, df_of):
     small = alg.with_bounds(**{l: min(b, 8) for l, b in
                                zip(alg.loops, alg.bounds)})
     sdf = stt.apply_stt(small, df.selected, df.T)
-    kern = rcompile.lower(small, sdf, interpret=True, validate=True)
-    print(f"lowered pareto winner {df.name}: template={kern.template} "
-          f"blocks={kern.blocks} validated={kern.validated}")
+    acc = repro.generate(small, sdf, interpret=True, validate=True)
+    print(f"generated pareto winner {df.name}: template={acc.template} "
+          f"blocks={acc.kernel.blocks} validated={acc.kernel.validated}")
 
 
 def main() -> None:

@@ -10,9 +10,9 @@ hypothesis -> change -> measure log lives in EXPERIMENTS.md.
 Variants are ModelConfig overrides (plus env toggles) registered below; add
 new ones as the hillclimb progresses.
 
-STT cells (ISSUE 1: benchmarks migrate to the compile pipeline): an
-``--stt <algebra>`` cell lowers (algebra x named STT) through
-``repro.compile.lower`` instead, timing cold lowering, cached re-lowering
+STT cells (ISSUE 2: benchmarks ride the front door): an ``--stt
+<algebra>`` cell generates (algebra x named STT) through
+``repro.generate`` instead, timing cold generation, cached re-generation
 and kernel wall time, and appends the record the same way:
 
     PYTHONPATH=src python -m benchmarks.perf_iterate \
@@ -75,38 +75,38 @@ def run_variant(arch: str, shape: str, variant: str, multi: bool = False):
 
 
 def run_stt_cell(name: str, kind: str, interpret: bool = True) -> dict:
-    """One (algebra x named STT) cell through the compile pipeline."""
+    """One (algebra x named STT) cell through the front door."""
     import time
 
+    import repro
     from repro import compile as rcompile
-    from repro.core import algebra, stt
+    from repro.core import algebra
 
     alg = algebra.get_algebra(name)
-    df = stt.apply_stt(alg, alg.loops[:3], stt.stt_from_name(kind))
 
     rcompile.cache_clear()
     t0 = time.perf_counter()
-    kern = rcompile.lower(alg, df, interpret=interpret, validate=False)
+    acc = repro.generate(alg, kind, interpret=interpret, validate=False)
     t_cold = time.perf_counter() - t0
     t0 = time.perf_counter()
-    rcompile.lower(alg, df, interpret=interpret, validate=False)
+    repro.generate(alg, kind, interpret=interpret, validate=False)
     t_cached = time.perf_counter() - t0
 
     operands = alg.random_operands(0)
     t0 = time.perf_counter()
-    out = kern(operands)
+    out = acc(operands)
     out.block_until_ready()
     t_first = time.perf_counter() - t0
     t0 = time.perf_counter()
-    out = kern(operands)
+    out = acc(operands)
     out.block_until_ready()
     t_steady = time.perf_counter() - t0
 
-    r = kern.cost_report()
+    r = acc.cost_report()
     return {
         "cell": f"stt_{name}_{kind}",
-        "algebra": name, "dataflow": df.name,
-        "template": kern.template, "blocks": list(kern.blocks),
+        "algebra": name, "dataflow": acc.dataflow.name,
+        "template": acc.template, "blocks": list(acc.kernel.blocks),
         "lower_cold_s": t_cold, "lower_cached_s": t_cached,
         "exec_first_s": t_first, "exec_steady_s": t_steady,
         "cache": rcompile.cache_info(),

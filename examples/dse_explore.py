@@ -1,14 +1,14 @@
 """Design-space exploration walkthrough (paper Fig. 6 in miniature).
 
-Enumerates every distinct GEMM dataflow TensorLib can generate for one loop
-selection, costs them with the paper's cycle/area/power model, prints the
-Pareto frontier with the mesh-level schedule each point maps to on a TPU
-pod, and compiles the best point to a validated executable via
-``repro.compile.lower``.
+``repro.search`` enumerates every distinct GEMM dataflow TensorLib can
+generate for one loop selection, costs each with the paper's
+cycle/area/power model, and returns the ranked candidates;
+``repro.generate(search=...)`` consumes the ranking directly and hands
+back the compiled winner — DSE to executable in two calls.
 
     PYTHONPATH=src python examples/dse_explore.py
 """
-from repro import compile as rcompile
+import repro
 from repro.core import algebra, dse, plan, stt
 from repro.dist.schedules import schedule_from_comm_plan
 
@@ -20,28 +20,30 @@ pairs = dse.sweep_with_dataflows(g, selections=[("m", "n", "k")])
 print(f"distinct GEMM dataflows (one selection, |T entries| <= 1): "
       f"{len(pairs)}")
 
-df_of = {id(r): df for r, df in pairs}
 good = [r for r, _ in pairs if r.normalized_perf >= 0.5]
 front = dse.pareto_front(good)
 print(f"efficient points: {len(good)}; pareto frontier: {len(front)}\n")
 
+ranked = repro.search(g, top_k=10, selections=[("m", "n", "k")])
 print(f"{'dataflow':12s} {'perf':>6s} {'area':>7s} {'power':>7s}  mesh schedule")
-for r in sorted(front, key=lambda r: -r.normalized_perf)[:10]:
-    sched = schedule_from_comm_plan(plan.comm_plan_for(df_of[id(r)]))
+for r, df in ranked:
+    sched = schedule_from_comm_plan(plan.comm_plan_for(df))
     print(f"{r.dataflow_name:12s} {r.normalized_perf:6.3f} "
           f"{r.area_units:7.0f} {r.power_mw:6.1f}mW  {sched}")
 
-# compile the frontier winner: plan -> executable (shrunk bounds so the
-# python loop-nest oracle used for validation stays fast)
-best = min(front, key=lambda r: r.cycles)
-df = df_of[id(best)]
+# generate the winner: candidates are lowered best-first at shrunk bounds
+# (so the python loop-nest oracle used for validation stays fast); the
+# first that validates becomes the accelerator
 small = g.with_bounds(m=16, n=16, k=16)
-kern = rcompile.lower(small, stt.apply_stt(small, df.selected, df.T),
-                      interpret=True, validate=True)
-print(f"\ncompiled frontier winner {df.name}: template={kern.template} "
-      f"blocks={kern.blocks} validated={kern.validated}")
+small_ranked = [(r, stt.apply_stt(small, df.selected, df.T))
+                for r, df in ranked]
+acc = repro.generate(small, search=small_ranked, validate=True)
+print(f"\ngenerated search winner {acc.dataflow.name}: "
+      f"template={acc.template} blocks={acc.kernel.blocks} "
+      f"validated={acc.kernel.validated}")
 
 print("\nReading: MMT (multicast) = SUMMA all-gather matmul; "
       "SST (systolic) = Cannon ppermute rings; STS/TSS = ring "
       "reduce-scatter — one STT matrix selects both the kernel template "
-      "and the collective schedule.")
+      "and the collective schedule, and repro.generate(...).sharded(mesh) "
+      "executes the CommPlan directly.")

@@ -1,59 +1,75 @@
-"""Quickstart: the paper's pipeline end-to-end in 60 lines.
+"""Quickstart: the paper's pipeline through the one front door.
 
 1. Describe a tensor algebra (GEMM) as a loop nest.
 2. Pick a Space-Time Transformation matrix -> TensorLib classifies each
    tensor's dataflow (paper Table I).
-3. The classification selects hardware: a Pallas kernel template
-   (intra-chip) and a collective schedule (inter-chip).
-4. ``compile.lower`` turns plan into executable: the shared tile chooser
-   picks block sizes, the kernel runs and is checked against the oracle,
-   and repeat lowerings hit the compile cache.
+3. ``repro.generate`` turns the classification into a complete
+   accelerator: the Pallas kernel template on a chip *and* the collective
+   schedule between chips, both selected by the same plan.
+4. With a device mesh, the same handle executes multi-chip: the generated
+   CommPlan compiles to a shard_map program (SUMMA / Cannon / ring-reduce
+   fall out as special cases — nothing is hand-picked).
 
     PYTHONPATH=src python examples/quickstart.py
+    # multi-chip on fake devices:
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+        PYTHONPATH=src python examples/quickstart.py
 """
+import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro import compile as rcompile
-from repro.core import algebra, plan, stt
+import repro
+from repro.core import algebra
 
 # 1. the computation: C[m,n] += A[m,k] * B[n,k]
 gemm = algebra.gemm(m=256, n=256, k=256)
 
-# 2. dataflow generation for three classic STTs
+# 2+3. one call per dataflow: classification -> plan -> executable
 for kind in ("identity", "output_stationary", "weight_stationary"):
-    df = stt.apply_stt(gemm, ("m", "n", "k"), stt.stt_from_name(kind))
+    acc = repro.generate(gemm, kind, validate=False)
+    df = acc.dataflow
     print(f"\nSTT {kind!r} -> dataflow {df.name}")
     for t in df.tensors:
         print(f"  {t.tensor}: {t.cls.value:12s} dp={t.dp} dt={t.dt}")
-
-    # 3. hardware generation (module selection)
-    ep = plan.plan_for(df)
-    print(f"  PE modules: {ep.pe_modules}")
-    print(f"  kernel template: {ep.kernel.template} "
-          f"(VMEM-resident: {ep.kernel.resident_tensor})")
+    print(f"  PE modules: {acc.plan.pe_modules}")
+    print(f"  kernel template: {acc.template} "
+          f"(VMEM-resident: {acc.plan.kernel.resident_tensor})")
     print(f"  mesh schedule: "
-          f"{ {t.tensor: t.kind for t in ep.comm.tensors} }")
+          f"{ {t.tensor: t.kind for t in acc.plan.comm.tensors} }")
 
-# 4. compile the generated accelerator and run it (interpret mode on CPU;
-#    Mosaic on TPU).  Blocks come from the same tile chooser that the cost
-#    model prices with, not a hard-coded default.
-df = stt.apply_stt(gemm, ("m", "n", "k"), stt.stt_from_name(
-    "output_stationary"))
-kern = rcompile.lower(gemm, df, interpret=True)
-print(f"\ncompiled: template={kern.template} blocks={kern.blocks} "
-      f"stationary={kern.stationary}")
+# 4. run the generated accelerator (interpret mode on CPU; Mosaic on TPU).
+#    Blocks come from the same tile chooser the cost model prices with.
+acc = repro.generate(gemm, "output_stationary")
+print(f"\ncompiled: template={acc.template} blocks={acc.kernel.blocks} "
+      f"stationary={acc.kernel.stationary}")
 rng = np.random.default_rng(0)
 a = jnp.array(rng.standard_normal((256, 256)), jnp.float32)
 b = jnp.array(rng.standard_normal((256, 256)), jnp.float32)
-c = kern({"A": a, "B": b})
+c = acc({"A": a, "B": b})
 err = float(jnp.abs(c - a @ b.T).max())
 print(f"generated kernel vs oracle: max err {err:.2e}")
 assert err < 1e-3
 
-# repeat lowering is free: the compile cache returns the same kernel
-again = rcompile.lower(gemm, df, interpret=True)
-info = rcompile.cache_info()
-assert again is kern and info["hits"] >= 1
+# repeat generation is free: the (bounded, thread-safe) compile cache
+# returns the same kernel object
+again = repro.generate(gemm, "output_stationary")
+info = repro.compile.cache_info()
+assert again.kernel is acc.kernel and info["hits"] >= 1
 print(f"compile cache: {info}")
+
+# multi-chip: the same plan drives the chip mesh when devices allow.  The
+# SST dataflow's two ppermute rings + sharded output compile to a Cannon
+# schedule — derived from the CommPlan, not picked by name.
+if len(jax.devices()) >= 4:
+    from repro.dist.engine import square_submesh
+    multi = acc.sharded(square_submesh(2))
+    c2 = multi({"A": a, "B": b})
+    err = float(jnp.abs(c2 - a @ b.T).max())
+    print(f"multi-chip (2x2 mesh, strategy="
+          f"{multi._program().strategy}): max err {err:.2e}")
+    assert err < 1e-2
+else:
+    print("single device only: skipping the mesh demo "
+          "(rerun with XLA_FLAGS=--xla_force_host_platform_device_count=8)")
 print("quickstart OK")

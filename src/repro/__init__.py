@@ -1,0 +1,39 @@
+"""repro — TensorLib (spatial accelerator generation) on TPU/jax_pallas.
+
+The one front door:
+
+    import repro
+    acc = repro.generate("gemm", "output_stationary")
+    c = acc({"A": a, "B": b})                    # single chip (Pallas)
+    c = acc.sharded(mesh)({"A": a, "B": b})      # multi-chip (CommPlan)
+
+``repro.generate`` runs classification -> plan -> compile and returns an
+:class:`repro.api.Accelerator`; ``repro.search`` ranks the design space so
+``generate(search=...)`` can consume it.  Subpackages stay importable on
+their own (``repro.core``, ``repro.compile``, ``repro.dist``, ...) — the
+lazy attribute hook below keeps ``import repro`` free of jax imports.
+"""
+from typing import TYPE_CHECKING
+
+__all__ = ["Accelerator", "generate", "search"]
+
+if TYPE_CHECKING:  # pragma: no cover - typing only
+    from .api import Accelerator, generate
+    from .core.dse import search
+
+
+def __getattr__(name):
+    if name in ("generate", "Accelerator"):
+        from . import api
+        return getattr(api, name)
+    if name == "search":
+        from .core.dse import search
+        return search
+    # plain submodule access (`import repro; repro.compile`) must keep
+    # working even when the submodule wasn't imported yet
+    import importlib
+    try:
+        return importlib.import_module(f".{name}", __name__)
+    except ModuleNotFoundError:
+        raise AttributeError(
+            f"module 'repro' has no attribute {name!r}") from None

@@ -1,0 +1,239 @@
+"""The front door: ``repro.generate`` — one call from algebra to accelerator.
+
+TensorLib's headline claim is that one transformation matrix yields a
+*complete* accelerator, module selection **and connection**.  This module
+is that claim as an API: ``generate`` runs the whole pipeline —
+classification (``core/stt.py``), plan (``core/plan.py``), intra-chip
+lowering (``compile.lower``), and, given a device mesh, the inter-chip
+CommPlan interpreter (``dist/comm_engine.py``) — and returns a single
+:class:`Accelerator` handle:
+
+    import repro
+    from repro.dist.engine import square_submesh
+
+    acc = repro.generate("gemm", "output_stationary")   # single chip
+    c = acc({"A": a, "B": b})
+
+    acc = repro.generate(alg, search=5)                 # DSE-ranked pick
+    multi = acc.sharded(square_submesh(2))              # same plan, mesh'd
+    c = multi({"A": a, "B": b})                         # CommPlan-driven
+
+The dataflow classification drives *both* levels from the same plan:
+the Pallas template on each chip and the shard_map collectives between
+chips.  SUMMA / Cannon / ring-reduce are not modes a user selects — they
+fall out of ``gemm`` x the MMT / SST / K-spatial dataflows.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterable, Optional, Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .compile import lower as _lower
+from .compile.pipeline import CompiledKernel
+from .core import dse as _dse
+from .core import stt as _stt
+from .core.algebra import PAPER_ALGEBRAS, TensorAlgebra, get_algebra
+from .core.costmodel import CostReport
+from .core.plan import ExecutionPlan
+from .core.stt import Dataflow
+from .core.tiling import ArrayConfig
+
+DataflowLike = Union[Dataflow, str, None]
+
+
+def _resolve_algebra(alg: Union[TensorAlgebra, str],
+                     bounds: Optional[Dict[str, int]]) -> TensorAlgebra:
+    if isinstance(alg, str):
+        if alg not in PAPER_ALGEBRAS:
+            raise ValueError(f"unknown algebra {alg!r}; "
+                             f"registry: {sorted(PAPER_ALGEBRAS)}")
+        return get_algebra(alg, **(bounds or {}))
+    if bounds:
+        return alg.with_bounds(**bounds)
+    return alg
+
+
+def _resolve_dataflow(alg: TensorAlgebra, dataflow: DataflowLike) -> Dataflow:
+    if dataflow is None:
+        dataflow = "output_stationary"
+    if isinstance(dataflow, str):
+        return _stt.apply_stt(alg, alg.loops[:3],
+                              _stt.stt_from_name(dataflow))
+    return dataflow
+
+
+@dataclasses.dataclass
+class Accelerator:
+    """A generated accelerator: one handle over both pipeline levels.
+
+    ``__call__`` executes on a single chip (the lowered Pallas kernel) or,
+    when bound to a mesh via :meth:`sharded` / ``generate(mesh=...)``,
+    across chips with every transfer prescribed by the generated CommPlan.
+    """
+
+    kernel: CompiledKernel
+    mesh: Optional["jax.sharding.Mesh"] = None
+    #: DSE candidates considered when built via ``generate(search=...)``,
+    #: best first; ``candidates[0]`` is the one this accelerator runs.
+    candidates: Optional[Tuple[Tuple[CostReport, Dataflow], ...]] = None
+    _mesh_prog: Optional[object] = dataclasses.field(
+        default=None, repr=False, compare=False)
+
+    # -- introspection ----------------------------------------------------
+    @property
+    def algebra(self) -> TensorAlgebra:
+        return self.kernel.algebra
+
+    @property
+    def dataflow(self) -> Dataflow:
+        return self.kernel.dataflow
+
+    @property
+    def plan(self) -> ExecutionPlan:
+        """The full generated plan: PE modules, KernelPlan, CommPlan."""
+        return self.kernel.plan
+
+    @property
+    def template(self) -> str:
+        return self.kernel.template
+
+    def cost_report(self) -> CostReport:
+        """Paper cost model's view of this exact (algebra, dataflow,
+        config) — same tile chooser the executed blocks come from."""
+        return self.kernel.cost_report()
+
+    def describe(self) -> str:
+        df = self.dataflow
+        lines = [f"Accelerator({self.algebra.name} x {df.name})",
+                 f"  kernel: template={self.template} "
+                 f"blocks={self.kernel.blocks} "
+                 f"resident={self.plan.kernel.resident_tensor}"]
+        kinds = " ".join(
+            f"{t.tensor}:{t.kind}"
+            + (f"[{','.join(t.mesh_axes)}]" if t.mesh_axes else "")
+            for t in self.plan.comm.tensors)
+        lines.append(f"  comm:   {kinds}")
+        if self.mesh is not None:
+            prog = self._program()
+            lines.append(f"  mesh:   {dict(zip(self.mesh.axis_names, self.mesh.devices.shape))}"
+                         f" strategy={prog.strategy}")
+        return "\n".join(lines)
+
+    # -- execution --------------------------------------------------------
+    def _program(self):
+        if self._mesh_prog is None:
+            from .dist import comm_engine
+            self._mesh_prog = comm_engine.compile_comm_plan(
+                self.plan.comm, self.kernel.gemm, self.mesh,
+                dtype=self.kernel.dtype)
+        return self._mesh_prog
+
+    def __call__(self, operands: Dict[str, jax.Array]) -> jax.Array:
+        if self.mesh is None:
+            return self.kernel(operands)
+        k = self.kernel
+        cast = {name: jnp.asarray(v).astype(k.dtype)
+                for name, v in operands.items()}
+        lhs, rhs = k.gemm.prepare(cast)
+        out2d = self._program()(lhs, rhs)
+        return k.gemm.finish(out2d)
+
+    def sharded(self, mesh: "jax.sharding.Mesh") -> "Accelerator":
+        """Bind this accelerator to a 2-D device mesh: execution becomes
+        the CommPlan interpreter's shard_map program (chip-level wires),
+        with the same plan driving both levels."""
+        return dataclasses.replace(self, mesh=mesh, _mesh_prog=None)
+
+    def validate(self, seed: int = 0, atol: float = 1e-3) -> float:
+        """Run on random operands and compare against ``alg.reference``.
+
+        Validates the *bound* execution path: the single-chip kernel when
+        no mesh is attached, the CommPlan-driven shard_map program when
+        one is.  Returns the max abs error; raises on mismatch."""
+        if self.mesh is None:
+            return self.kernel.validate(seed=seed, atol=atol)
+        operands = self.algebra.random_operands(seed)
+        got = np.asarray(self(operands), dtype=np.float64)
+        want = self.algebra.reference(operands).astype(np.float64)
+        err = float(np.abs(got - want).max()) if got.size else 0.0
+        if got.shape != want.shape or err > atol:
+            raise AssertionError(
+                f"sharded {self.algebra.name} x {self.dataflow.name} "
+                f"diverged from reference: shape {got.shape} vs "
+                f"{want.shape}, max err {err:.3e}")
+        return err
+
+
+def generate(alg: Union[TensorAlgebra, str],
+             dataflow: DataflowLike = None, *,
+             search: Union[int, Sequence[Tuple[CostReport, Dataflow]],
+                           None] = None,
+             mesh: Optional["jax.sharding.Mesh"] = None,
+             bounds: Optional[Dict[str, int]] = None,
+             cfg: ArrayConfig = ArrayConfig(),
+             dtype=jnp.float32,
+             interpret: Optional[bool] = None,
+             backend: str = "pallas",
+             validate: Optional[bool] = None) -> Accelerator:
+    """Generate a complete accelerator from a tensor algebra.
+
+    Args:
+      alg: a :class:`TensorAlgebra` or a registry name (``"gemm"``, ...).
+      dataflow: a :class:`Dataflow`, a named STT (``"identity"``,
+        ``"output_stationary"``, ``"weight_stationary"``,
+        ``"input_stationary"``), or None for the output-stationary
+        default.  Mutually exclusive with ``search``.
+      search: ``top_k`` (int) to run ``dse.search`` here, or a ranked
+        ``[(report, dataflow), ...]`` from a previous search.  Candidates
+        are lowered best-first; the first that validates wins.
+      mesh: bind the result to a 2-D device mesh — ``__call__`` then runs
+        the generated CommPlan through ``dist/comm_engine.py``.
+      bounds: loop-bound overrides forwarded to the algebra.
+      interpret: run Pallas in interpret mode; default: auto (True off-TPU
+        so the same script runs on CPU and real hardware unchanged).
+
+    Returns an :class:`Accelerator`.
+    """
+    algebra = _resolve_algebra(alg, bounds)
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+
+    candidates: Optional[Tuple[Tuple[CostReport, Dataflow], ...]] = None
+    if search is not None:
+        if dataflow is not None:
+            raise ValueError("pass either dataflow= or search=, not both")
+        ranked = (_dse.search(algebra, top_k=search, cfg=cfg)
+                  if isinstance(search, int) else list(search))
+        if not ranked:
+            raise ValueError("search produced no candidates")
+        errors = []
+        kernel = None
+        taken = 0
+        for rep, df in ranked:
+            taken += 1
+            try:
+                kernel = _lower(algebra, df, cfg=cfg, dtype=dtype,
+                                interpret=interpret, backend=backend,
+                                validate=validate)
+                break
+            except Exception as e:          # try the next-ranked candidate
+                errors.append(f"{df.name}: {e}")
+        if kernel is None:
+            raise RuntimeError(
+                "no search candidate lowered successfully:\n  "
+                + "\n  ".join(errors))
+        # winner first, then the remaining candidates in rank order
+        candidates = (ranked[taken - 1],) + tuple(
+            r for i, r in enumerate(ranked) if i != taken - 1)
+    else:
+        df = _resolve_dataflow(algebra, dataflow)
+        kernel = _lower(algebra, df, cfg=cfg, dtype=dtype,
+                        interpret=interpret, backend=backend,
+                        validate=validate)
+
+    acc = Accelerator(kernel, candidates=candidates)
+    return acc.sharded(mesh) if mesh is not None else acc

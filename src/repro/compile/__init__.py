@@ -4,7 +4,7 @@ Public API:
     lower               — plan + GEMM-ize + tile + cache -> CompiledKernel
     gemmize / GemmForm  — algebra lowering onto the GEMM templates
     default_dataflow    — output-stationary STT over the first three loops
-    cache_info / cache_clear — compile-cache introspection
+    cache_info / cache_clear / cache_resize — bounded-LRU compile cache
 
 The paper's pipeline is ``algebra + STT -> dataflow -> hardware``; this
 package is the last arrow on TPU: the dataflow classification selects a
@@ -13,10 +13,12 @@ template's GEMM interface (lowering.py), and the shared tile chooser
 (core/tiling.py) fixes the block sizes the cost model already priced.
 """
 from .lowering import GemmForm, gemmize
-from .pipeline import (CompiledKernel, VALIDATE_MACS_LIMIT, cache_clear,
-                       cache_info, default_dataflow, lower)
+from .pipeline import (CompiledKernel, DEFAULT_CACHE_CAPACITY,
+                       VALIDATE_MACS_LIMIT, cache_clear, cache_info,
+                       cache_resize, default_dataflow, lower)
 
 __all__ = [
-    "CompiledKernel", "GemmForm", "VALIDATE_MACS_LIMIT",
-    "cache_clear", "cache_info", "default_dataflow", "gemmize", "lower",
+    "CompiledKernel", "DEFAULT_CACHE_CAPACITY", "GemmForm",
+    "VALIDATE_MACS_LIMIT", "cache_clear", "cache_info", "cache_resize",
+    "default_dataflow", "gemmize", "lower",
 ]

@@ -21,7 +21,9 @@ into a runnable, validated kernel:
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
+import threading
 from typing import Dict, Optional, Tuple
 
 import jax
@@ -109,11 +111,20 @@ class CompiledKernel:
 
 
 # ---------------------------------------------------------------------------
-# Compile cache
+# Compile cache — bounded LRU, safe under concurrent lowers (serving
+# processes lower from request threads; an unbounded dict would grow with
+# every distinct shape and race on simultaneous inserts).
 # ---------------------------------------------------------------------------
 
-_CACHE: Dict[Tuple, CompiledKernel] = {}
-_STATS = {"hits": 0, "misses": 0}
+#: default cap; generous for benchmarks (the full registry x named-STT
+#: matrix is 24 entries) while bounding long-running serving processes.
+DEFAULT_CACHE_CAPACITY = 256
+
+_CACHE: "collections.OrderedDict[Tuple, CompiledKernel]" = \
+    collections.OrderedDict()
+_CACHE_LOCK = threading.Lock()
+_CAPACITY = DEFAULT_CACHE_CAPACITY
+_STATS = {"hits": 0, "misses": 0, "evictions": 0}
 
 
 def _cache_key(alg: TensorAlgebra, df: Dataflow, cfg: ArrayConfig,
@@ -126,12 +137,27 @@ def _cache_key(alg: TensorAlgebra, df: Dataflow, cfg: ArrayConfig,
 
 
 def cache_info() -> Dict[str, int]:
-    return {"size": len(_CACHE), **_STATS}
+    with _CACHE_LOCK:
+        return {"size": len(_CACHE), "capacity": _CAPACITY, **_STATS}
 
 
 def cache_clear() -> None:
-    _CACHE.clear()
-    _STATS["hits"] = _STATS["misses"] = 0
+    with _CACHE_LOCK:
+        _CACHE.clear()
+        _STATS["hits"] = _STATS["misses"] = _STATS["evictions"] = 0
+
+
+def cache_resize(capacity: int) -> None:
+    """Set the LRU capacity, evicting least-recently-used entries now if
+    the cache is over the new cap."""
+    if capacity < 1:
+        raise ValueError("cache capacity must be >= 1")
+    global _CAPACITY
+    with _CACHE_LOCK:
+        _CAPACITY = capacity
+        while len(_CACHE) > _CAPACITY:
+            _CACHE.popitem(last=False)
+            _STATS["evictions"] += 1
 
 
 # ---------------------------------------------------------------------------
@@ -177,15 +203,22 @@ def lower(alg: TensorAlgebra, df: Optional[Dataflow] = None, *,
         raise ValueError(f"dataflow {df.name} was generated for algebra "
                          f"{df.algebra_name!r}, not {alg.name!r}")
     key = _cache_key(alg, df, cfg, dtype, interpret, backend)
-    hit = _CACHE.get(key)
+    with _CACHE_LOCK:
+        hit = _CACHE.get(key)
+        if hit is not None:
+            _STATS["hits"] += 1
+            _CACHE.move_to_end(key)
+        else:
+            _STATS["misses"] += 1
     if hit is not None:
-        _STATS["hits"] += 1
-        if validate and not hit.validated:
+        if not hit.validated and (
+                validate or (validate is None
+                             and alg.total_macs() <= VALIDATE_MACS_LIMIT)):
             # an earlier lower(validate=False) cached it unvalidated;
-            # honour the explicit request now
+            # honour the explicit or auto-validate request now (outside
+            # the lock — the python oracle can be slow)
             hit.validate()
         return hit
-    _STATS["misses"] += 1
 
     ep = plan_mod.plan_for(df)
     form = gemmize(alg)
@@ -199,5 +232,15 @@ def lower(alg: TensorAlgebra, df: Optional[Dataflow] = None, *,
     if validate or (validate is None
                     and alg.total_macs() <= VALIDATE_MACS_LIMIT):
         kernel.validate()
-    _CACHE[key] = kernel
+    with _CACHE_LOCK:
+        prior = _CACHE.get(key)
+        if prior is not None:
+            # a concurrent lower built the same kernel first; keep the
+            # cached one so callers always share a single object per key
+            _CACHE.move_to_end(key)
+            return prior
+        _CACHE[key] = kernel
+        while len(_CACHE) > _CAPACITY:
+            _CACHE.popitem(last=False)
+            _STATS["evictions"] += 1
     return kernel

@@ -235,6 +235,27 @@ def sweep(alg: TensorAlgebra,
     return [r for r, _ in sweep_with_dataflows(alg, cfg, selections)]
 
 
+def search(alg: TensorAlgebra, top_k: int = 5,
+           cfg: ArrayConfig = ArrayConfig(),
+           selections: Optional[Sequence[Tuple[str, ...]]] = None,
+           objective=None) -> List[Tuple[CostReport, Dataflow]]:
+    """Ranked design-space search: the DSE as an API the front door eats.
+
+    Sweeps the design space and returns the ``top_k`` best ``(report,
+    dataflow)`` pairs — pareto-optimal points first, then the rest, each
+    group ordered by ``objective`` (default: cycles, then area, then
+    power).  ``repro.generate(alg, search=...)`` consumes the result
+    directly: candidates are lowered in rank order and the first one that
+    validates becomes the accelerator.
+    """
+    key = objective or (lambda r: (r.cycles, r.area_units, r.power_mw))
+    pairs = sweep_with_dataflows(alg, cfg, selections)
+    front_ids = {id(r) for r in pareto_front([r for r, _ in pairs])}
+    ranked = sorted(pairs,
+                    key=lambda p: (id(p[0]) not in front_ids, key(p[0])))
+    return ranked[:top_k] if top_k else ranked
+
+
 def _front2d_keep(group: List[Tuple[float, float, int]]) -> List[int]:
     """Indices of (area, power) points in ``group`` not strictly dominated
     within the group (<= on both and < on at least one)."""

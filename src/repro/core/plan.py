@@ -50,9 +50,23 @@ class TensorCommPlan:
 
     tensor: str
     kind: str          # shard | all_gather | psum | ppermute_ring | stream
-    mesh_axis: Optional[str] = None   # axis the collective runs over
+    #: every mesh axis the reuse direction moves along, major axis first.
+    #: A diagonal direction (e.g. dp = (1, 1)) is realized as two chained
+    #: collectives, one per axis — both axes are recorded here instead of
+    #: silently dropping the minor one.
+    mesh_axes: Tuple[str, ...] = ()
     ring_shift: Tuple[int, ...] = ()  # systolic direction on the mesh
     delay: int = 0
+
+    @property
+    def mesh_axis(self) -> Optional[str]:
+        """Major axis of the collective (back-compat accessor)."""
+        return self.mesh_axes[0] if self.mesh_axes else None
+
+    @property
+    def is_diagonal(self) -> bool:
+        """True when the move spans more than one mesh axis (chained)."""
+        return len(self.mesh_axes) > 1
 
 
 @dataclasses.dataclass(frozen=True)
@@ -79,18 +93,23 @@ class KernelPlan:
     reduction_in_kernel: bool          # accumulate over a grid axis?
 
 
-def _axis_for(dp: Tuple[int, ...], axes: Tuple[str, str]) -> Optional[str]:
-    """Mesh axis along which a reuse direction moves (None if diagonal —
-    realized as two chained collectives, we report the major axis)."""
-    nz = [i for i, d in enumerate(dp) if d != 0]
-    if not nz:
-        return None
-    return axes[nz[0]]
+def _axes_for(dp: Tuple[int, ...], axes: Tuple[str, str]) -> Tuple[str, ...]:
+    """Every mesh axis a reuse direction moves along, major axis first.
+
+    A diagonal move such as dp = (1, 1) yields both axes: the collective
+    is realized as two chained per-axis collectives (or a 2-D collective
+    over the axis tuple), not silently truncated to the major axis.
+    """
+    return tuple(axes[i] for i, d in enumerate(dp) if d != 0)
 
 
-def comm_plan_for(df: Dataflow, axes: Tuple[str, str] = ("data", "model")
+def comm_plan_for(df: Dataflow, axes: Tuple[str, str] = ("x", "y")
                   ) -> CommPlan:
-    """Per-tensor mesh collectives generated from the classification."""
+    """Per-tensor mesh collectives generated from the classification.
+
+    ``axes`` defaults to the ("x", "y") names the dist engines and the
+    CommPlan interpreter (``dist/comm_engine.py``) use for the chip mesh.
+    """
     plans = []
     for t in df.tensors:
         c = t.cls
@@ -98,22 +117,22 @@ def comm_plan_for(df: Dataflow, axes: Tuple[str, str] = ("data", "model")
             plans.append(TensorCommPlan(t.tensor, "shard"))
         elif c is DataflowClass.MULTICAST:
             plans.append(TensorCommPlan(t.tensor, "all_gather",
-                                        _axis_for(t.dp, axes)))
+                                        _axes_for(t.dp, axes)))
         elif c is DataflowClass.BROADCAST:
-            plans.append(TensorCommPlan(t.tensor, "all_gather", axes[0]))
+            plans.append(TensorCommPlan(t.tensor, "all_gather", tuple(axes)))
         elif c is DataflowClass.REDUCTION:
             plans.append(TensorCommPlan(t.tensor, "psum",
-                                        _axis_for(t.dp, axes)))
+                                        _axes_for(t.dp, axes)))
         elif c is DataflowClass.SYSTOLIC:
             plans.append(TensorCommPlan(t.tensor, "ppermute_ring",
-                                        _axis_for(t.dp, axes),
+                                        _axes_for(t.dp, axes),
                                         ring_shift=t.dp, delay=t.dt))
         elif c is DataflowClass.MULTICAST_STATIONARY:
             plans.append(TensorCommPlan(t.tensor, "all_gather",
-                                        _axis_for(t.dp_multicast, axes)))
+                                        _axes_for(t.dp_multicast, axes)))
         elif c is DataflowClass.SYSTOLIC_MULTICAST:
             plans.append(TensorCommPlan(t.tensor, "ppermute_ring",
-                                        _axis_for(t.dp, axes),
+                                        _axes_for(t.dp, axes),
                                         ring_shift=t.dp, delay=t.dt))
         else:  # UNICAST
             plans.append(TensorCommPlan(t.tensor, "stream"))
@@ -162,7 +181,7 @@ class ExecutionPlan:
     comm: CommPlan
 
 
-def plan_for(df: Dataflow, axes: Tuple[str, str] = ("data", "model")
+def plan_for(df: Dataflow, axes: Tuple[str, str] = ("x", "y")
              ) -> ExecutionPlan:
     is_out = {t.tensor: (t.tensor == df.tensors[-1].tensor)
               for t in df.tensors}

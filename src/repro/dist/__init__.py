@@ -7,13 +7,21 @@ accelerator: each ``TensorCommPlan.kind`` maps to a shard_map collective
 systolic nearest-neighbour links, shard = stationary residency).
 
 Modules:
+    comm_engine — the generic CommPlan interpreter: any generated plan ->
+                  shard_map program (``compile_comm_plan``); what
+                  ``repro.generate(...).sharded(mesh)`` executes
     schedules — CommPlan -> named collective schedule (SUMMA / Cannon / ...)
-    engine    — shard_map GEMM realizations of the classic schedules
+    engine    — hand-written shard_map GEMM schedules, kept as the test
+                oracles the interpreter is checked against
     selftest  — executes every schedule on fake devices vs the jnp oracle
-                (run as ``python -m repro.dist.selftest`` with
+    comm_selftest — interpreter parity: every registry algebra sharded vs
+                single-chip, plus SUMMA/Cannon/ring-reduce-as-oracle
+                (both run as ``python -m repro.dist.<name>`` with
                 ``--xla_force_host_platform_device_count=8``)
 """
-from . import engine, schedules
+from . import comm_engine, engine, schedules
+from .comm_engine import compile_comm_plan
 from .schedules import schedule_from_comm_plan
 
-__all__ = ["engine", "schedules", "schedule_from_comm_plan"]
+__all__ = ["comm_engine", "compile_comm_plan", "engine", "schedules",
+           "schedule_from_comm_plan"]

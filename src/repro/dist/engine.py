@@ -1,14 +1,18 @@
-"""shard_map GEMM engines realizing generated collective schedules.
+"""Hand-written classic GEMM schedules — kept as test oracles.
 
-Each function executes one classic schedule the CommPlan classifier names
-(schedules.py), using exactly the collective its TensorCommPlan kinds
-prescribe: ``all_gather`` for multicast tensors, ``ppermute`` rings for
-systolic tensors, ``psum`` for reduction outputs, nothing for stationary
-(sharded) tensors.  Mesh axes are ("x", "y") — the chip-level analogue of
-the paper's 2-D PE array.
+Production mesh execution goes through the generic CommPlan interpreter
+(``comm_engine.compile_comm_plan``, what ``repro.generate(...).sharded``
+runs); these three hand-written schedules survive because they are
+independently-derived realizations of the classic algorithms the
+interpreter must recover as special cases:
 
-These run on fake CPU devices (XLA_FLAGS=--xla_force_host_platform_
-device_count=N) in tests and on real slices unchanged.
+    summa_matmul        = what gemm x MMT must compute
+    cannon_matmul       = what gemm x SST must compute
+    ring_reduce_matmul  = what gemm x a K-spatial STT must compute
+
+``repro.dist.comm_selftest`` asserts that parity on fake devices.  Mesh
+axes are ("x", "y") — the chip-level analogue of the paper's 2-D PE
+array.
 """
 from __future__ import annotations
 

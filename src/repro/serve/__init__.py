@@ -1,3 +1,5 @@
-"""Batched decode engine."""
+"""Serving engines: batched LM decode + generated-accelerator serving."""
 from . import engine
-from .engine import DecodeEngine, ServeConfig
+from .engine import AcceleratorEngine, DecodeEngine, ServeConfig
+
+__all__ = ["engine", "AcceleratorEngine", "DecodeEngine", "ServeConfig"]

@@ -1,14 +1,21 @@
-"""Batched decode engine: prefill + greedy/temperature decode loop.
+"""Serving engines: batched LM decode + tensor-algebra accelerators.
 
-Serving counterpart to the train driver: jit-compiled prefill and
-decode_step (the same functions the decode dry-run cells lower), a batch of
-independent sequences, and per-sequence EOS tracking — the minimal but real
-engine the examples drive.
+``DecodeEngine`` is the serving counterpart to the train driver:
+jit-compiled prefill and decode_step, a batch of independent sequences,
+and per-sequence EOS tracking.
+
+``AcceleratorEngine`` serves the STT side of the repo through the front
+door: requests name a registry algebra (plus optional bounds / dataflow)
+and the engine answers with the generated accelerator's output.  Repeat
+shapes are free — ``repro.generate`` rides the bounded, thread-safe
+compile cache — and a mesh-bound engine executes every request through
+the CommPlan interpreter.
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
+import threading
 from typing import Dict, Optional, Tuple
 
 import jax
@@ -72,3 +79,60 @@ class DecodeEngine:
         scaled = logits / self.serve_cfg.temperature
         return jax.random.categorical(key, scaled, axis=-1)[:, None].astype(
             jnp.int32)
+
+
+class AcceleratorEngine:
+    """Serve generated tensor-algebra accelerators (the front door, as a
+    service).
+
+    ``submit("gemm", {"A": a, "B": b})`` generates (or cache-hits) the
+    accelerator for the request's algebra/bounds/dataflow and executes
+    it; with ``mesh=`` every request runs multi-chip through the CommPlan
+    interpreter.  Request threads are safe: generation goes through the
+    locked compile cache and the per-engine stats lock is local.
+    """
+
+    def __init__(self, mesh=None, dtype=jnp.float32,
+                 interpret: Optional[bool] = None):
+        self.mesh = mesh
+        self.dtype = dtype
+        self.interpret = interpret
+        self._lock = threading.Lock()
+        #: request signature -> Accelerator.  The compile cache already
+        #: dedupes CompiledKernels, but a mesh-bound Accelerator also
+        #: carries the compiled MeshProgram (shard_map trace) — reusing
+        #: the handle is what makes repeat shapes free multi-chip too.
+        self._accs: Dict = {}
+        self._stats = {"requests": 0, "algebras": set()}
+
+    def _accelerator(self, algebra: str, dataflow, bounds):
+        # algebra (str or frozen TensorAlgebra) and dataflow (None, str or
+        # frozen Dataflow) are both hashable as-is
+        key = (algebra, dataflow, tuple(sorted((bounds or {}).items())))
+        with self._lock:
+            acc = self._accs.get(key)
+        if acc is None:
+            from .. import api
+            acc = api.generate(algebra, dataflow, bounds=bounds,
+                               mesh=self.mesh, dtype=self.dtype,
+                               interpret=self.interpret, validate=False)
+            with self._lock:
+                acc = self._accs.setdefault(key, acc)
+        return acc
+
+    def submit(self, algebra: str, operands: Dict[str, jax.Array], *,
+               dataflow=None, bounds: Optional[Dict[str, int]] = None
+               ) -> jax.Array:
+        acc = self._accelerator(algebra, dataflow, bounds)
+        out = acc(operands)
+        with self._lock:
+            self._stats["requests"] += 1
+            self._stats["algebras"].add(acc.algebra.name)
+        return out
+
+    def stats(self) -> Dict:
+        from ..compile import cache_info
+        with self._lock:
+            return {"requests": self._stats["requests"],
+                    "algebras": sorted(self._stats["algebras"]),
+                    "compile_cache": cache_info()}

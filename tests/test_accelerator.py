@@ -1,0 +1,173 @@
+"""The front door: ``repro.generate`` / ``Accelerator`` (ISSUE 2).
+
+Single-device API behaviour lives here (mesh-parity tests run on 8 fake
+devices in a subprocess — see test_distributed.py).  Also home to the
+satellite regression tests: diagonal CommPlan axes and the bounded,
+thread-safe compile cache.
+"""
+import concurrent.futures as cf
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+import repro
+from repro import compile as rcompile
+from repro.core import algebra, dse, linalg, plan, stt
+from repro.core.plan import ExecutionPlan
+
+
+def small_gemm():
+    return algebra.gemm(8, 8, 8)
+
+
+# ---------------------------------------------------------------------------
+# generate(): the one front door
+# ---------------------------------------------------------------------------
+
+def test_generate_by_name_matches_reference():
+    acc = repro.generate("gemm", bounds=dict(m=8, n=8, k=8), interpret=True)
+    assert isinstance(acc, repro.Accelerator)
+    operands = acc.algebra.random_operands(seed=1)
+    got = np.asarray(acc(operands)).round().astype(np.int64)
+    np.testing.assert_array_equal(got, acc.algebra.reference(operands))
+
+
+def test_generate_named_dataflow_and_plan_surface():
+    acc = repro.generate(small_gemm(), "weight_stationary", interpret=True)
+    assert isinstance(acc.plan, ExecutionPlan)
+    assert acc.template == "operand_stationary"
+    assert acc.plan.kernel.resident_tensor == "B"
+    # cost_report comes from the same (algebra, dataflow) pair
+    assert acc.cost_report().dataflow_name == acc.dataflow.name
+    assert acc.validate() <= 1e-3
+    assert "Accelerator(gemm" in acc.describe()
+
+
+def test_generate_default_is_output_stationary():
+    acc = repro.generate(small_gemm(), interpret=True)
+    assert acc.dataflow.name == "MNK-SST"
+    assert acc.template == "output_stationary"
+
+
+def test_generate_rejects_unknown_name():
+    with pytest.raises(ValueError, match="registry"):
+        repro.generate("winograd")
+
+
+def test_generate_rejects_dataflow_and_search_together():
+    with pytest.raises(ValueError, match="not both"):
+        repro.generate(small_gemm(), "identity", search=2)
+
+
+def test_generate_from_search_consumes_ranked_candidates():
+    g = small_gemm()
+    ranked = dse.search(g, top_k=3, selections=[("m", "n", "k")])
+    assert len(ranked) == 3
+    acc = repro.generate(g, search=ranked, interpret=True)
+    assert acc.candidates is not None and len(acc.candidates) == 3
+    # the winner is the dataflow the accelerator actually runs
+    assert acc.candidates[0][1].signature == acc.dataflow.signature
+    operands = g.random_operands(seed=2)
+    got = np.asarray(acc(operands)).round().astype(np.int64)
+    np.testing.assert_array_equal(got, g.reference(operands))
+
+
+def test_generate_search_int_runs_dse():
+    acc = repro.generate(small_gemm(), search=2, interpret=True)
+    assert acc.candidates and acc.kernel.validated
+
+
+# ---------------------------------------------------------------------------
+# Satellite: diagonal reuse directions keep both mesh axes
+# ---------------------------------------------------------------------------
+
+def test_diagonal_reduction_reports_both_axes():
+    # T maps e_k -> (1, 1, 0): C's reuse moves diagonally in space with
+    # dt = 0 -> a reduction over *both* mesh axes, previously truncated
+    # to the major axis by _axis_for
+    g = small_gemm()
+    T = linalg.mat([[1, 0, 1], [0, 1, 1], [1, 1, 0]])
+    df = stt.apply_stt(g, ("m", "n", "k"), T)
+    by = {t.tensor: t for t in df.tensors}
+    assert by["C"].cls.value == "reduction" and by["C"].dp == (1, 1)
+    comm = plan.comm_plan_for(df)
+    c = comm.by_tensor()["C"]
+    assert c.kind == "psum"
+    assert c.mesh_axes == ("x", "y")        # both axes, major first
+    assert c.mesh_axis == "x"               # back-compat accessor
+    assert c.is_diagonal
+
+
+def test_single_axis_moves_unchanged():
+    g = small_gemm()
+    df = stt.apply_stt(g, ("m", "n", "k"),
+                       stt.stt_from_name("output_stationary"))
+    comm = plan.comm_plan_for(df)
+    a = comm.by_tensor()["A"]
+    assert a.kind == "ppermute_ring" and a.mesh_axes == ("y",)
+    assert not a.is_diagonal
+
+
+# ---------------------------------------------------------------------------
+# Satellite: bounded + locked compile cache
+# ---------------------------------------------------------------------------
+
+def test_cache_capacity_evicts_lru():
+    rcompile.cache_clear()
+    old_cap = rcompile.cache_info()["capacity"]
+    try:
+        rcompile.cache_resize(2)
+        g = small_gemm()
+        for m in (8, 16, 24):
+            alg = g.with_bounds(m=m)
+            df = stt.apply_stt(alg, alg.loops,
+                               stt.stt_from_name("identity"))
+            rcompile.lower(alg, df, interpret=True, validate=False)
+        info = rcompile.cache_info()
+        assert info["size"] == 2
+        assert info["evictions"] >= 1
+        # the first-lowered (LRU) entry was evicted: re-lowering misses
+        alg = g.with_bounds(m=8)
+        df = stt.apply_stt(alg, alg.loops, stt.stt_from_name("identity"))
+        before = rcompile.cache_info()["misses"]
+        rcompile.lower(alg, df, interpret=True, validate=False)
+        assert rcompile.cache_info()["misses"] == before + 1
+    finally:
+        rcompile.cache_resize(old_cap)
+        rcompile.cache_clear()
+
+
+def test_cache_resize_rejects_nonpositive():
+    with pytest.raises(ValueError):
+        rcompile.cache_resize(0)
+
+
+def test_accelerator_serve_engine_rides_front_door():
+    from repro.serve import AcceleratorEngine
+    eng = AcceleratorEngine(interpret=True)
+    g = small_gemm()
+    operands = g.random_operands(seed=4)
+    out = eng.submit("gemm", operands, bounds=dict(m=8, n=8, k=8))
+    np.testing.assert_array_equal(
+        np.asarray(out).round().astype(np.int64), g.reference(operands))
+    st = eng.stats()
+    assert st["requests"] == 1 and st["algebras"] == ["gemm"]
+    assert st["compile_cache"]["size"] >= 1
+
+
+def test_cache_concurrent_lowers_share_one_kernel():
+    rcompile.cache_clear()
+    alg = small_gemm()
+    df = stt.apply_stt(alg, alg.loops, stt.stt_from_name("identity"))
+
+    def one(_):
+        return rcompile.lower(alg, df, interpret=True, validate=False)
+
+    with cf.ThreadPoolExecutor(max_workers=8) as ex:
+        kernels = list(ex.map(one, range(16)))
+    assert len({id(k) for k in kernels}) == 1
+    info = rcompile.cache_info()
+    assert info["size"] == 1
+    assert info["hits"] + info["misses"] == 16
+    rcompile.cache_clear()

@@ -25,3 +25,19 @@ def run_selftest(module: str, timeout: int = 600) -> str:
 def test_distributed_engine_selftest():
     out = run_selftest("repro.dist.selftest")
     assert "ALL DIST SELFTESTS PASSED" in out
+
+
+def test_comm_engine_selftest():
+    """The generic CommPlan interpreter: every registry algebra sharded
+    on an 8-fake-device mesh matches the single-chip kernel and the
+    loop-nest oracle, and SUMMA / Cannon / ring-reduce fall out as
+    special cases matching the hand-written engines (ISSUE 2)."""
+    out = run_selftest("repro.dist.comm_selftest")
+    assert "ALL COMM-ENGINE SELFTESTS PASSED" in out
+    for name in ("gemm", "conv2d", "mttkrp", "ttmc", "batched_gemv",
+                 "depthwise_conv"):
+        # the exact per-algebra parity row, not just the name anywhere
+        assert f"{name:15s} comm=" in out, f"missing parity row for {name}"
+    assert "summa-as-oracle" in out
+    assert "cannon-as-oracle" in out
+    assert "ring-reduce-as-oracle" in out
