@@ -21,7 +21,7 @@ import time
 from collections import Counter
 
 import repro
-from repro.core import algebra, costmodel, dse, stt
+from repro.core import algebra, dse, stt
 
 
 def sweep_algebra(alg, selections=None):

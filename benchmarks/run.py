@@ -5,6 +5,7 @@
 Sections:
   fig5   — normalized dataflow performance per tensor algebra (cycle model)
   fig6   — GEMM / depthwise-conv design-space area+power sweep
+  sparse — block-sparse GEMM: BSR kernel parity + compressed-format costs
   table3 — MM throughput comparison (XLA baselines + TPU roofline projection)
   roofline — aggregated dry-run roofline table (if results/dryrun exists)
 """
@@ -39,6 +40,15 @@ def main() -> None:
         fig6_dse.main()
     except Exception:
         failures.append("fig6")
+        traceback.print_exc()
+
+    _section("Block-sparse GEMM — BSR kernel + compressed-format costs")
+    try:
+        from benchmarks import sparse_gemm
+        sys.argv = ["sparse_gemm"]
+        sparse_gemm.main()
+    except Exception:
+        failures.append("sparse")
         traceback.print_exc()
 
     _section("Table III — matmul throughput comparison")

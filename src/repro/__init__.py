@@ -15,10 +15,11 @@ lazy attribute hook below keeps ``import repro`` free of jax imports.
 """
 from typing import TYPE_CHECKING
 
-__all__ = ["Accelerator", "generate", "search"]
+__all__ = ["Accelerator", "Sparsity", "generate", "search"]
 
 if TYPE_CHECKING:  # pragma: no cover - typing only
     from .api import Accelerator, generate
+    from .core.algebra import Sparsity
     from .core.dse import search
 
 
@@ -29,6 +30,10 @@ def __getattr__(name):
     if name == "search":
         from .core.dse import search
         return search
+    if name == "Sparsity":
+        # pure-numpy descriptor: importable without dragging in jax
+        from .core.algebra import Sparsity
+        return Sparsity
     # plain submodule access (`import repro; repro.compile`) must keep
     # working even when the submodule wasn't imported yet
     import importlib

@@ -26,7 +26,7 @@ fall out of ``gemm`` x the MMT / SST / K-spatial dataflows.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Iterable, Optional, Sequence, Tuple, Union
+from typing import Dict, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -36,7 +36,7 @@ from .compile import lower as _lower
 from .compile.pipeline import CompiledKernel
 from .core import dse as _dse
 from .core import stt as _stt
-from .core.algebra import PAPER_ALGEBRAS, TensorAlgebra, get_algebra
+from .core.algebra import PAPER_ALGEBRAS, Sparsity, TensorAlgebra, get_algebra
 from .core.costmodel import CostReport
 from .core.plan import ExecutionPlan
 from .core.stt import Dataflow
@@ -112,6 +112,12 @@ class Accelerator:
                  f"  kernel: template={self.template} "
                  f"blocks={self.kernel.blocks} "
                  f"resident={self.plan.kernel.resident_tensor}"]
+        if self.algebra.is_sparse:
+            dens = " ".join(f"{name}:{self.algebra.density_of(name):.3f}"
+                            for name, _ in self.algebra.sparsity)
+            lines.append(f"  sparse: mode={self.kernel.sparse_mode} {dens}"
+                         + (" (mesh: dense replication)"
+                            if self.mesh is not None else ""))
         kinds = " ".join(
             f"{t.tensor}:{t.kind}"
             + (f"[{','.join(t.mesh_axes)}]" if t.mesh_axes else "")
@@ -136,16 +142,36 @@ class Accelerator:
         if self.mesh is None:
             return self.kernel(operands)
         k = self.kernel
-        cast = {name: jnp.asarray(v).astype(k.dtype)
-                for name, v in operands.items()}
+        # same dtype cast + sparsity-pattern enforcement as the single-chip
+        # path, so both levels compute the same function of the operands
+        cast = k.cast_operands(operands)
         lhs, rhs = k.gemm.prepare(cast)
         out2d = self._program()(lhs, rhs)
         return k.gemm.finish(out2d)
 
-    def sharded(self, mesh: "jax.sharding.Mesh") -> "Accelerator":
+    def sharded(self, mesh: "jax.sharding.Mesh", *,
+                sparse: str = "dense") -> "Accelerator":
         """Bind this accelerator to a 2-D device mesh: execution becomes
         the CommPlan interpreter's shard_map program (chip-level wires),
-        with the same plan driving both levels."""
+        with the same plan driving both levels.
+
+        Sparse algebras fall back to **dense replication** between chips
+        (``sparse='dense'``, the default): operands move in masked-dense
+        form and every transfer/collective is the one the CommPlan
+        prescribes, so results stay exact — only the intra-chip
+        block-skipping is given up.  ``sparse='bsr'`` (shipping the
+        compressed blocks through the collectives) is not implemented;
+        requesting it raises rather than silently densifying.
+        """
+        if sparse not in ("dense", "bsr"):
+            raise ValueError(f"sparse must be 'dense' or 'bsr', "
+                             f"got {sparse!r}")
+        if sparse == "bsr":
+            raise NotImplementedError(
+                "block-sparse multi-chip execution (compressed blocks "
+                "through the CommPlan collectives) is not supported yet; "
+                "use sparse='dense' — operands are replicated/sharded in "
+                "masked-dense form and results remain exact")
         return dataclasses.replace(self, mesh=mesh, _mesh_prog=None)
 
     def validate(self, seed: int = 0, atol: float = 1e-3) -> float:
@@ -174,6 +200,7 @@ def generate(alg: Union[TensorAlgebra, str],
                            None] = None,
              mesh: Optional["jax.sharding.Mesh"] = None,
              bounds: Optional[Dict[str, int]] = None,
+             sparsity: Optional[Dict[str, Sparsity]] = None,
              cfg: ArrayConfig = ArrayConfig(),
              dtype=jnp.float32,
              interpret: Optional[bool] = None,
@@ -193,12 +220,20 @@ def generate(alg: Union[TensorAlgebra, str],
       mesh: bind the result to a 2-D device mesh — ``__call__`` then runs
         the generated CommPlan through ``dist/comm_engine.py``.
       bounds: loop-bound overrides forwarded to the algebra.
+      sparsity: per-tensor block-sparse patterns (tensor name ->
+        :class:`~repro.core.algebra.Sparsity`), applied via
+        ``TensorAlgebra.with_sparsity``.  Sparse operands route through
+        the BSR kernel when the lowering has a structured 2-D image for
+        the pattern, masked-dense otherwise; ``.sharded(mesh)`` falls
+        back to dense replication (see :meth:`Accelerator.sharded`).
       interpret: run Pallas in interpret mode; default: auto (True off-TPU
         so the same script runs on CPU and real hardware unchanged).
 
     Returns an :class:`Accelerator`.
     """
     algebra = _resolve_algebra(alg, bounds)
+    if sparsity:
+        algebra = algebra.with_sparsity(**sparsity)
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
 

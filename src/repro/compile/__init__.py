@@ -12,13 +12,13 @@ Pallas template (core/plan.py), the algebra is lowered onto that
 template's GEMM interface (lowering.py), and the shared tile chooser
 (core/tiling.py) fixes the block sizes the cost model already priced.
 """
-from .lowering import GemmForm, gemmize
+from .lowering import GemmForm, OperandSparsity, gemmize
 from .pipeline import (CompiledKernel, DEFAULT_CACHE_CAPACITY,
                        VALIDATE_MACS_LIMIT, cache_clear, cache_info,
                        cache_resize, default_dataflow, lower)
 
 __all__ = [
     "CompiledKernel", "DEFAULT_CACHE_CAPACITY", "GemmForm",
-    "VALIDATE_MACS_LIMIT", "cache_clear", "cache_info", "cache_resize",
-    "default_dataflow", "gemmize", "lower",
+    "OperandSparsity", "VALIDATE_MACS_LIMIT", "cache_clear", "cache_info",
+    "cache_resize", "default_dataflow", "gemmize", "lower",
 ]

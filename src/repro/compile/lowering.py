@@ -25,15 +25,40 @@ all run inside the selected Pallas template, which is the point.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, FrozenSet, Mapping, Tuple
+from typing import Callable, Dict, FrozenSet, Mapping, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from ..core.algebra import TensorAlgebra
+from ..core.algebra import Sparsity, TensorAlgebra
 
 
 Operands = Mapping[str, jax.Array]
+
+
+@dataclasses.dataclass(frozen=True)
+class OperandSparsity:
+    """A tensor's block-sparse pattern mapped onto one 2-D GEMM operand.
+
+    ``coords`` live on the block grid of the *prepared* 2-D operand
+    (lhs2d or rhs2d, post-``prepare``), sorted row-major — the form the
+    BSR kernel's scalar-prefetch index map consumes directly.
+    """
+
+    side: str                            # "lhs" | "rhs"
+    tensor: str                          # the algebra tensor it came from
+    block: Tuple[int, int]               # 2-D block shape on that operand
+    coords: Tuple[Tuple[int, int], ...]  # row-major block-COO
+    grid: Tuple[int, int]                # block-grid shape of the operand
+
+    @property
+    def nnz_blocks(self) -> int:
+        return len(self.coords)
+
+    @property
+    def density(self) -> float:
+        total = self.grid[0] * self.grid[1]
+        return self.nnz_blocks / total if total else 0.0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -50,6 +75,14 @@ class GemmForm:
     rhs_tensors: FrozenSet[str]
     prepare: Callable[[Operands], Tuple[jax.Array, jax.Array]]
     finish: Callable[[jax.Array], jax.Array]
+    #: structured block-sparse operand (at most one: the BSR kernel takes
+    #: one coordinate list); None for dense algebras
+    sparse: Optional[OperandSparsity] = None
+    #: sparse tensors executed via the masked-dense fallback — their
+    #: pattern has no structured 2-D image under this lowering (operands
+    #: are zero-masked, so the dense templates stay exact; only the
+    #: block-skipping speedup is lost)
+    masked_sparse: Tuple[str, ...] = ()
 
 
 def _b(alg: TensorAlgebra, *names: str) -> Tuple[int, ...]:
@@ -174,12 +207,101 @@ _LOWERINGS: Dict[str, Callable[[TensorAlgebra], GemmForm]] = {
 }
 
 
+# ---------------------------------------------------------------------------
+# Block-sparse pattern -> 2-D GEMM operand mapping
+# ---------------------------------------------------------------------------
+# Each mapper takes (alg, tensor shape, Sparsity) and returns an
+# OperandSparsity on the *prepared* 2-D operand, or None when the pattern
+# has no structured image under the lowering (the caller then falls back
+# to masked-dense execution, which stays exact).
+
+def _sparse_gemm_A(alg: TensorAlgebra, shape, sp: Sparsity
+                   ) -> Optional[OperandSparsity]:
+    # A (m, k) feeds lhs2d unchanged
+    grid = sp.grid(shape)
+    return OperandSparsity("lhs", "A", (sp.block[0], sp.block[1]),
+                           tuple(sorted(sp.coords)), grid)
+
+
+def _sparse_gemm_B(alg: TensorAlgebra, shape, sp: Sparsity
+                   ) -> Optional[OperandSparsity]:
+    # B (n, k) becomes rhs2d = B.T (k, n): block coords transpose
+    grid = sp.grid(shape)
+    coords = tuple(sorted((c, r) for r, c in sp.coords))
+    return OperandSparsity("rhs", "B", (sp.block[1], sp.block[0]), coords,
+                           (grid[1], grid[0]))
+
+
+def _sparse_conv2d_B(alg: TensorAlgebra, shape, sp: Sparsity
+                     ) -> Optional[OperandSparsity]:
+    # weights (k, c, p, q) reshape to lhs2d (k, c*p*q): a block covering
+    # the full (p, q) window maps to a contiguous 2-D block — the
+    # block-sparse im2col form (im2col'd activations stay dense)
+    k, c, p, q = shape
+    if sp.block[2:] != (p, q):
+        return None
+    grid = sp.grid(shape)
+    coords = tuple(sorted((ci[0], ci[1]) for ci in sp.coords))
+    return OperandSparsity("lhs", "B", (sp.block[0], sp.block[1] * p * q),
+                           coords, (grid[0], grid[1]))
+
+
+def _sparse_mttkrp_A(alg: TensorAlgebra, shape, sp: Sparsity
+                     ) -> Optional[OperandSparsity]:
+    # A (i, k, l) reshapes to lhs2d (i, k*l): blocks covering full l stay
+    # contiguous through the mode-1 unfolding
+    i, k, l = shape
+    if sp.block[2] != l:
+        return None
+    grid = sp.grid(shape)
+    coords = tuple(sorted((ci[0], ci[1]) for ci in sp.coords))
+    return OperandSparsity("lhs", "A", (sp.block[0], sp.block[1] * l),
+                           coords, (grid[0], grid[1]))
+
+
+_SPARSE_MAPPERS: Dict[Tuple[str, str], Callable] = {
+    ("gemm", "A"): _sparse_gemm_A,
+    ("gemm", "B"): _sparse_gemm_B,
+    ("conv2d", "B"): _sparse_conv2d_B,
+    ("mttkrp", "A"): _sparse_mttkrp_A,
+}
+
+
+def _attach_sparsity(alg: TensorAlgebra, form: GemmForm) -> GemmForm:
+    """Map every attached pattern onto the GEMM form: at most one becomes
+    the structured (BSR-executed) operand — the densest savings win when
+    several qualify — and the rest run masked-dense."""
+    mapped = []
+    masked = []
+    for name, sp in alg.sparsity:
+        t = next(t for t in alg.tensors if t.name == name)
+        mapper = _SPARSE_MAPPERS.get((alg.name, name))
+        osp = mapper(alg, alg.tensor_shape(t), sp) if mapper else None
+        if osp is None:
+            masked.append(name)
+        else:
+            mapped.append(osp)
+    mapped.sort(key=lambda o: (o.density, o.tensor))
+    chosen = mapped[0] if mapped else None
+    masked.extend(o.tensor for o in mapped[1:])
+    return dataclasses.replace(form, sparse=chosen,
+                               masked_sparse=tuple(sorted(masked)))
+
+
 def gemmize(alg: TensorAlgebra) -> GemmForm:
-    """Lower any registry algebra to a single-GEMM form (bounds-aware)."""
+    """Lower any registry algebra to a single-GEMM form (bounds-aware).
+
+    Algebras carrying block-sparse patterns get them mapped onto the 2-D
+    operands here (``GemmForm.sparse`` / ``masked_sparse``); the pipeline
+    then routes the structured operand through the BSR kernel grid.
+    """
     try:
         builder = _LOWERINGS[alg.name]
     except KeyError:
         raise NotImplementedError(
             f"no GEMM lowering registered for algebra {alg.name!r}; "
             f"known: {sorted(_LOWERINGS)}") from None
-    return builder(alg)
+    form = builder(alg)
+    if alg.sparsity:
+        form = _attach_sparsity(alg, form)
+    return form

@@ -72,16 +72,54 @@ class CompiledKernel:
     def template(self) -> str:
         return self.plan.kernel.template
 
-    def __call__(self, operands: Dict[str, jax.Array]) -> jax.Array:
+    @property
+    def sparse(self):
+        """The structured block-sparse operand (OperandSparsity) or None."""
+        return self.gemm.sparse
+
+    @property
+    def sparse_mode(self) -> str:
+        """``bsr`` (grid skips zero blocks), ``masked`` (sparse algebra,
+        dense execution on zero-masked operands), or ``dense``."""
+        if self.gemm.sparse is not None:
+            return "bsr"
+        return "masked" if self.algebra.is_sparse else "dense"
+
+    def cast_operands(self, operands: Dict[str, jax.Array]
+                      ) -> Dict[str, jax.Array]:
+        """Cast to the kernel dtype and *enforce* every attached sparsity
+        pattern (zero outside the nonzero blocks).  Masking here makes the
+        pattern part of the kernel's semantics on every path: the BSR grid
+        (which never reads out-of-pattern blocks), the masked-dense
+        fallback, and the mesh program all compute the same function of
+        the same operands — even when a caller passes unmasked data."""
         cast = {name: jnp.asarray(v).astype(self.dtype)
                 for name, v in operands.items()}
+        for name, sp in self.algebra.sparsity:
+            t = next(t for t in self.algebra.tensors if t.name == name)
+            mask = jnp.asarray(sp.element_mask(self.algebra.tensor_shape(t)))
+            # select, don't multiply: out-of-pattern inf/nan must drop out
+            cast[name] = jnp.where(mask, cast[name],
+                                   jnp.zeros((), self.dtype))
+        return cast
+
+    def __call__(self, operands: Dict[str, jax.Array]) -> jax.Array:
+        cast = self.cast_operands(operands)
         lhs, rhs = self.gemm.prepare(cast)
         bm, bn, bk = self.blocks
-        out2d = ops.stt_matmul(
-            lhs, rhs, template=self.template, stationary=self.stationary,
-            bm=bm, bn=bn, bk=bk, backend=self.backend,
-            interpret=self.interpret,
-            vmem_budget=self.cfg.vmem_budget_bytes)
+        sp = self.gemm.sparse
+        if sp is not None:
+            sp_arr, dense_arr = (lhs, rhs) if sp.side == "lhs" else (rhs, lhs)
+            out2d = ops.bsr_matmul(
+                sp_arr, dense_arr, coords=sp.coords, block=sp.block,
+                bstream=bn if sp.side == "lhs" else bm, side=sp.side,
+                backend=self.backend, interpret=self.interpret)
+        else:
+            out2d = ops.stt_matmul(
+                lhs, rhs, template=self.template, stationary=self.stationary,
+                bm=bm, bn=bn, bk=bk, backend=self.backend,
+                interpret=self.interpret,
+                vmem_budget=self.cfg.vmem_budget_bytes)
         return self.gemm.finish(out2d)
 
     def validate(self, seed: int = 0, atol: float = 1e-3) -> float:
@@ -220,7 +258,8 @@ def lower(alg: TensorAlgebra, df: Optional[Dataflow] = None, *,
             hit.validate()
         return hit
 
-    ep = plan_mod.plan_for(df)
+    ep = plan_mod.plan_for(
+        df, densities={name: alg.density_of(name) for name, _ in alg.sparsity})
     form = gemmize(alg)
     blocks = _blocks_from_tile(alg, df, form, cfg)
     stationary = "A" if ep.kernel.resident_tensor in form.lhs_tensors \

@@ -10,7 +10,7 @@ Public API:
     tpu.V5E / RooflineTerms                — target-hardware roofline model
 """
 from . import algebra, costmodel, dse, linalg, plan, stt, tiling, tpu
-from .algebra import PAPER_ALGEBRAS, TensorAlgebra, get_algebra
+from .algebra import PAPER_ALGEBRAS, Sparsity, TensorAlgebra, get_algebra
 from .costmodel import ArrayConfig, CostReport, PaperCycleModel
 from .plan import CommPlan, ExecutionPlan, KernelPlan, plan_for
 from .stt import Dataflow, DataflowClass, InvalidSTT, apply_stt, simulate, stt_from_name
@@ -18,7 +18,7 @@ from .tpu import V5E, RooflineTerms, TpuSpec
 
 __all__ = [
     "algebra", "costmodel", "dse", "linalg", "plan", "stt", "tiling", "tpu",
-    "PAPER_ALGEBRAS", "TensorAlgebra", "get_algebra",
+    "PAPER_ALGEBRAS", "Sparsity", "TensorAlgebra", "get_algebra",
     "ArrayConfig", "CostReport", "PaperCycleModel",
     "CommPlan", "ExecutionPlan", "KernelPlan", "plan_for",
     "Dataflow", "DataflowClass", "InvalidSTT", "apply_stt", "simulate",

@@ -45,6 +45,12 @@ class CostReport:
     bw_stall_factor: float
     fill_overhead_frac: float
     traffic_bytes: Dict[str, float]
+    #: compressed-format index traffic per sparse tensor (block-COO
+    #: coordinates moved alongside the payload); empty for dense algebras
+    metadata_bytes: Dict[str, float] = dataclasses.field(default_factory=dict)
+    #: fraction of the loop nest's MACs that touch nonzero blocks
+    #: (product of input-tensor block densities; 1.0 = dense)
+    work_density: float = 1.0
     area_units: float = 0.0
     power_mw: float = 0.0
 
@@ -66,8 +72,29 @@ _is_unit_row = tiling.is_unit_row
 # ---------------------------------------------------------------------------
 
 class PaperCycleModel:
-    def __init__(self, cfg: ArrayConfig = ArrayConfig()):
+    #: bytes per block-COO coordinate component (int32 indices)
+    INDEX_BYTES = 4
+
+    def __init__(self, cfg: ArrayConfig = ArrayConfig(),
+                 density: Optional[float] = None):
+        """``density`` is a uniform input-operand density override used to
+        rank dataflows for a target sparsity level *without* committing to
+        a concrete pattern (``dse.search(..., density=...)``).  Tensors
+        carrying an explicit :class:`~repro.core.algebra.Sparsity` always
+        use their own block density instead."""
+        if density is not None and not 0.0 < density <= 1.0:
+            raise ValueError(f"density override must be in (0, 1], "
+                             f"got {density}")
         self.cfg = cfg
+        self.density = density
+
+    def _density_of(self, alg: TensorAlgebra, name: str,
+                    is_output: bool) -> float:
+        if is_output:
+            return 1.0     # sum-of-products outputs are dense in general
+        if alg.sparsity_of(name) is not None:
+            return alg.density_of(name)
+        return float(self.density) if self.density is not None else 1.0
 
     # -- tiling -------------------------------------------------------------
     def _choose_tile(self, alg: TensorAlgebra, df: Dataflow
@@ -78,17 +105,27 @@ class PaperCycleModel:
 
     # -- traffic ------------------------------------------------------------
     def _tile_traffic(self, alg: TensorAlgebra, df: Dataflow,
-                      tile: Sequence[int]) -> Dict[str, float]:
-        """Bytes moved between scratchpad and array per tile, per tensor.
+                      tile: Sequence[int]
+                      ) -> Tuple[Dict[str, float], Dict[str, float]]:
+        """Bytes moved between scratchpad and array per tile, per tensor:
+        ``(payload, metadata)``.
 
         Distinct elements touched by the tile box = product of index-extents
         (exact for box domains).  Multicast/broadcast reuse means an element
         is fetched once; unicast tensors have injective access so the same
         formula automatically yields full-volume traffic.
+
+        Compressed-format terms: a block-sparse tensor only moves its
+        nonzero blocks — payload scales by its block density — plus the
+        block-COO coordinate list for the blocks the tile touches
+        (``rank`` int32 indices per nonzero block).  The uniform
+        ``density`` override scales payload only (no pattern, no concrete
+        metadata layout to price).
         """
         cols = [alg.loop_index(s) for s in df.selected]
         by = df.by_tensor()
         out: Dict[str, float] = {}
+        meta: Dict[str, float] = {}
         for t in alg.tensors:
             a_sel = linalg.submatrix_cols(t.access, cols)
             distinct = 1
@@ -102,8 +139,16 @@ class PaperCycleModel:
                 # stationary outputs are written back once per reduction
                 # (amortised below by only charging the final tile) — keep 1.
                 factor = 1.0
-            out[t.name] = distinct * self.cfg.elem_bytes * factor
-        return out
+            d = self._density_of(alg, t.name, t.is_output)
+            out[t.name] = distinct * self.cfg.elem_bytes * factor * d
+            sp = None if t.is_output else alg.sparsity_of(t.name)
+            if sp is not None:
+                block_elems = 1
+                for b in sp.block:
+                    block_elems *= b
+                nnz_touched = d * distinct / block_elems
+                meta[t.name] = nnz_touched * self.INDEX_BYTES * len(sp.block)
+        return out, meta
 
     # -- main entry ----------------------------------------------------------
     def evaluate(self, alg: TensorAlgebra, df: Dataflow) -> CostReport:
@@ -128,16 +173,28 @@ class PaperCycleModel:
         n_outer = 1
         for i in outer:
             n_outer *= alg.bounds[i]
+        # Fraction of stages whose blocks are all nonzero: a sparse-aware
+        # array skips stages that hit a zero block of any sparse input
+        # (independence approximation when several inputs are sparse).
+        # Honesty note (same stance as the block-diagonal lowerings): this
+        # prices the *algebra's* compressed-format dataflow — what the
+        # generated hardware would do.  The TPU realization only skips
+        # blocks on the BSR path (`CompiledKernel.sparse_mode == "bsr"`);
+        # the masked-dense fallback executes dense and moves the full
+        # operand, costing more than this model reports.
+        work = 1.0
+        for t in alg.inputs:
+            work *= self._density_of(alg, t.name, False)
         # packed copies absorb outer/tile iterations
-        n_stages = math.ceil(n_tiles_sel * n_outer / n_copies)
+        n_stages = max(1, math.ceil(n_tiles_sel * n_outer / n_copies * work))
 
-        traffic = self._tile_traffic(alg, df, tile)
-        tile_bytes = sum(traffic.values()) * n_copies
+        traffic, meta = self._tile_traffic(alg, df, tile)
+        tile_bytes = (sum(traffic.values()) + sum(meta.values())) * n_copies
         demand = tile_bytes / max(1, tile_cycles)
         stall = max(1.0, demand / self.cfg.bytes_per_cycle)
 
         cycles = n_stages * tile_cycles * stall
-        macs = alg.total_macs()
+        macs = max(1, round(alg.total_macs() * work))
         peak = int(cycles * self.cfg.n_pes)
         report = CostReport(
             dataflow_name=df.name,
@@ -150,6 +207,9 @@ class PaperCycleModel:
             fill_overhead_frac=fill / tile_cycles if tile_cycles else 0.0,
             traffic_bytes={k: v * n_stages * n_copies
                            for k, v in traffic.items()},
+            metadata_bytes={k: v * n_stages * n_copies
+                            for k, v in meta.items()},
+            work_density=work,
         )
         report.area_units = self.area_units(alg, df)
         report.power_mw = self.power_mw(alg, df, report)

@@ -215,14 +215,16 @@ def sweep_with_dataflows(alg: TensorAlgebra,
                          cfg: ArrayConfig = ArrayConfig(),
                          selections: Optional[Sequence[Tuple[str, ...]]]
                          = None,
+                         density: Optional[float] = None,
                          ) -> List[Tuple[CostReport, Dataflow]]:
     """Full DSE sweep, keeping the (report, dataflow) association.
 
     ``Dataflow.name`` is *not* unique across a sweep (hundreds of distinct
     T's share a letter combo), so consumers that need to act on a costed
     point — e.g. lower the pareto winner — must use this pairing rather
-    than a name lookup."""
-    model = PaperCycleModel(cfg)
+    than a name lookup.  ``density`` is the uniform input-density override
+    (tensors with an explicit Sparsity pattern keep their own)."""
+    model = PaperCycleModel(cfg, density=density)
     return [(model.evaluate(alg, df), df)
             for df in enumerate_dataflows(alg, selections).values()]
 
@@ -230,15 +232,18 @@ def sweep_with_dataflows(alg: TensorAlgebra,
 def sweep(alg: TensorAlgebra,
           cfg: ArrayConfig = ArrayConfig(),
           selections: Optional[Sequence[Tuple[str, ...]]] = None,
+          density: Optional[float] = None,
           ) -> List[CostReport]:
     """Full DSE sweep: enumerate + cost every distinct dataflow."""
-    return [r for r, _ in sweep_with_dataflows(alg, cfg, selections)]
+    return [r for r, _ in sweep_with_dataflows(alg, cfg, selections, density)]
 
 
 def search(alg: TensorAlgebra, top_k: int = 5,
            cfg: ArrayConfig = ArrayConfig(),
            selections: Optional[Sequence[Tuple[str, ...]]] = None,
-           objective=None) -> List[Tuple[CostReport, Dataflow]]:
+           objective=None,
+           density: Optional[float] = None,
+           ) -> List[Tuple[CostReport, Dataflow]]:
     """Ranked design-space search: the DSE as an API the front door eats.
 
     Sweeps the design space and returns the ``top_k`` best ``(report,
@@ -247,9 +252,14 @@ def search(alg: TensorAlgebra, top_k: int = 5,
     power).  ``repro.generate(alg, search=...)`` consumes the result
     directly: candidates are lowered in rank order and the first one that
     validates becomes the accelerator.
+
+    Sparse ranking: an algebra carrying :class:`~repro.core.algebra.
+    Sparsity` patterns is priced with its per-tensor block densities and
+    compressed-format traffic terms automatically; ``density`` applies a
+    uniform input-density override instead when no pattern is attached.
     """
     key = objective or (lambda r: (r.cycles, r.area_units, r.power_mw))
-    pairs = sweep_with_dataflows(alg, cfg, selections)
+    pairs = sweep_with_dataflows(alg, cfg, selections, density)
     front_ids = {id(r) for r in pareto_front([r for r, _ in pairs])}
     ranked = sorted(pairs,
                     key=lambda p: (id(p[0]) not in front_ids, key(p[0])))

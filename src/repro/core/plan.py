@@ -22,7 +22,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict, Optional, Tuple
 
-from .stt import Dataflow, DataflowClass, TensorDataflow
+from .stt import Dataflow, DataflowClass
 
 
 # map: (class, is_output) -> PE-internal module of paper Fig. 3
@@ -57,6 +57,15 @@ class TensorCommPlan:
     mesh_axes: Tuple[str, ...] = ()
     ring_shift: Tuple[int, ...] = ()  # systolic direction on the mesh
     delay: int = 0
+    #: block-level density of the tensor (1.0 = dense).  Sparse operands
+    #: currently replicate/move their *masked dense* form between chips;
+    #: the density annotates how much of that traffic is payload so mesh
+    #: cost calibration can discount it.
+    density: float = 1.0
+
+    @property
+    def is_sparse(self) -> bool:
+        return self.density < 1.0
 
     @property
     def mesh_axis(self) -> Optional[str]:
@@ -103,12 +112,15 @@ def _axes_for(dp: Tuple[int, ...], axes: Tuple[str, str]) -> Tuple[str, ...]:
     return tuple(axes[i] for i, d in enumerate(dp) if d != 0)
 
 
-def comm_plan_for(df: Dataflow, axes: Tuple[str, str] = ("x", "y")
-                  ) -> CommPlan:
+def comm_plan_for(df: Dataflow, axes: Tuple[str, str] = ("x", "y"),
+                  densities: Optional[Dict[str, float]] = None) -> CommPlan:
     """Per-tensor mesh collectives generated from the classification.
 
     ``axes`` defaults to the ("x", "y") names the dist engines and the
     CommPlan interpreter (``dist/comm_engine.py``) use for the chip mesh.
+    ``densities`` (tensor name -> block density) annotates sparse operands
+    on the emitted plan — metadata only, the collective kinds are a
+    function of the classification alone.
     """
     plans = []
     for t in df.tensors:
@@ -136,6 +148,9 @@ def comm_plan_for(df: Dataflow, axes: Tuple[str, str] = ("x", "y")
                                         ring_shift=t.dp, delay=t.dt))
         else:  # UNICAST
             plans.append(TensorCommPlan(t.tensor, "stream"))
+    if densities:
+        plans = [dataclasses.replace(p, density=densities.get(p.tensor, 1.0))
+                 for p in plans]
     return CommPlan(df.name, tuple(plans))
 
 
@@ -146,7 +161,6 @@ def kernel_plan_for(df: Dataflow) -> KernelPlan:
     "which tensor is stationary" becomes "which block is VMEM-resident
     across the reduction axis of the Pallas grid".
     """
-    by = df.by_tensor()
     stationary = [t.tensor for t in df.tensors
                   if t.cls in (DataflowClass.STATIONARY,
                                DataflowClass.MULTICAST_STATIONARY)]
@@ -181,11 +195,12 @@ class ExecutionPlan:
     comm: CommPlan
 
 
-def plan_for(df: Dataflow, axes: Tuple[str, str] = ("x", "y")
-             ) -> ExecutionPlan:
+def plan_for(df: Dataflow, axes: Tuple[str, str] = ("x", "y"),
+             densities: Optional[Dict[str, float]] = None) -> ExecutionPlan:
     is_out = {t.tensor: (t.tensor == df.tensors[-1].tensor)
               for t in df.tensors}
     modules = tuple(
         f"{t.tensor}->{PAPER_PE_MODULES[(t.cls, is_out[t.tensor])]}"
         for t in df.tensors)
-    return ExecutionPlan(df, modules, kernel_plan_for(df), comm_plan_for(df, axes))
+    return ExecutionPlan(df, modules, kernel_plan_for(df),
+                         comm_plan_for(df, axes, densities))

@@ -31,7 +31,7 @@ from fractions import Fraction
 from typing import Dict, List, Optional, Sequence, Tuple
 
 from . import linalg
-from .algebra import TensorAlgebra, TensorAccess
+from .algebra import TensorAlgebra
 from .linalg import Mat, Vec
 
 
@@ -279,7 +279,8 @@ def simulate(alg: TensorAlgebra, selected: Sequence[str], T: Mat):
         st = linalg.as_int_tuple(linalg.matvec(T, list(x)))
         p, t = st[:n_space], st[n_space]
         for d in range(n_space):
-            lo[d] = min(lo[d], p[d]); hi[d] = max(hi[d], p[d])
+            lo[d] = min(lo[d], p[d])
+            hi[d] = max(hi[d], p[d])
         tmin, tmax = min(tmin, t), max(tmax, t)
         if (p, t) in pts:
             raise InvalidSTT(f"collision at PE {p} cycle {t}")

@@ -11,7 +11,7 @@ EXPERIMENTS.md are derived from compiled-HLO statistics with these constants
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional
+from typing import Dict
 
 
 @dataclasses.dataclass(frozen=True)

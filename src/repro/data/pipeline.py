@@ -14,10 +14,8 @@ dataset, so the pipeline synthesizes a *deterministic* token stream from
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Iterator, Optional
+from typing import Dict, Iterator
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
 

@@ -41,7 +41,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Callable, Dict, FrozenSet, Optional, Tuple
+from typing import Callable, Dict, FrozenSet, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -14,6 +14,7 @@ import jax
 import jax.numpy as jnp
 
 from ..core.plan import KernelPlan
+from . import bsr_gemm as _bsr
 from . import flash_attention as _fa
 from . import ref as _ref
 from . import ssd_scan as _ssd
@@ -74,6 +75,37 @@ def stt_matmul(a: jax.Array, b: jax.Array, *, template: str = "output_stationary
     else:
         raise ValueError(f"unknown template {template!r}")
     return out[:m, :n]
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "coords", "block", "bstream", "side", "backend", "interpret"))
+def bsr_matmul(sparse: jax.Array, dense: jax.Array, *,
+               coords: _bsr.Coords, block: tuple, bstream: int = 128,
+               side: str = "lhs", backend: str = "pallas",
+               interpret: bool = False) -> jax.Array:
+    """Block-sparse GEMM with one block-COO operand (zeros outside the
+    static ``coords`` pattern are skipped by the kernel grid).
+
+    ``side='lhs'``: C = sparse @ dense, ``sparse`` (m, k) with ``block`` =
+    (bm, bk) blocks; ``bstream`` tiles the streamed n dimension.
+    ``side='rhs'``: C = dense @ sparse, realized by transposition symmetry
+    (C^T = sparse^T @ dense^T) so one kernel serves both operand sides.
+    ``backend='xla'`` routes to a plain jnp matmul (the operand is already
+    masked, so the dense product is the masked oracle).
+    """
+    if side not in ("lhs", "rhs"):
+        raise ValueError(f"side must be 'lhs' or 'rhs', got {side!r}")
+    if backend == "xla":
+        out = (sparse @ dense) if side == "lhs" else (dense @ sparse)
+        return out
+    if side == "rhs":
+        return bsr_matmul(sparse.T, dense.T,
+                          coords=_bsr.transpose_coords(coords),
+                          block=(block[1], block[0]), bstream=bstream,
+                          side="lhs", backend=backend, interpret=interpret).T
+    bm, bk = block
+    return _bsr.bsr_matmul(sparse, dense, coords=coords, bm=bm, bk=bk,
+                           bn=bstream, interpret=interpret)
 
 
 def matmul_from_plan(plan: KernelPlan, a: jax.Array, b: jax.Array,

@@ -26,7 +26,7 @@ Block shapes default to the MXU-aligned 128 and are validated in
 from __future__ import annotations
 
 import functools
-from typing import Optional, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp

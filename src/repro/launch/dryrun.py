@@ -31,7 +31,6 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool) -> dict:
     import jax
 
     from .. import jax_compat
-    from ..configs import get_config
     from ..core import tpu
     from . import hlo_analysis, specs
     from .mesh import make_production_mesh
@@ -90,7 +89,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool) -> dict:
 
 
 def main() -> None:
-    from ..configs import ARCH_IDS, SHAPES
+    from ..configs import ARCH_IDS
     from . import specs
 
     ap = argparse.ArgumentParser(description=__doc__)

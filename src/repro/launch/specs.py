@@ -14,7 +14,6 @@ masters + AdamW state (8-bit for grok-1-314b so it fits v5e HBM).
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax

@@ -23,7 +23,7 @@ import jax.numpy as jnp
 from .. import jax_compat
 from ..configs.base import ModelConfig
 from . import common
-from .common import Leaf, dense_init, shard, stacked_dense_init
+from .common import shard, stacked_dense_init
 
 NEG_INF = float(-1e30)
 FULL_SCORES_MAX_LEN = 8_192   # above this, use the chunked path

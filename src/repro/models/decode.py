@@ -25,8 +25,7 @@ from . import attention as attn
 from . import mlp as mlp_mod
 from . import ssm as ssm_mod
 from .common import rmsnorm, shard
-from .transformer import (_dense_block, _residual_shard, _shared_block,
-                          forward, hybrid_groups, scan_layers)
+from .transformer import forward, hybrid_groups, scan_layers
 
 
 # ---------------------------------------------------------------------------
@@ -119,7 +118,6 @@ def init_cache(params: Dict, cfg: ModelConfig, batch: int, seq_len: int, *,
         n_apps, _, _ = hybrid_groups(cfg)
         cache["shared"] = kv(n_apps, s_c)
     if cfg.family == "encdec":
-        enc = frontend.astype(jnp.dtype(cfg.dtype))
         enc_fwd, _, caches = forward(params, jnp.zeros((batch, 1), jnp.int32),
                                      cfg, frontend=frontend,
                                      collect_cache=True)
@@ -146,7 +144,6 @@ def decode_step(params: Dict, tokens: jax.Array, cache: Dict[str, Any],
 
     Returns (logits (B, vocab), updated cache)."""
     compute = jnp.dtype(cfg.dtype)
-    b = tokens.shape[0]
     pos = cache["pos"]
     x = jnp.take(params["embed"], tokens, axis=0).astype(compute)
     x = shard(x, ("pod", "data"), None, None)

@@ -31,7 +31,6 @@ from jax.sharding import PartitionSpec as P
 
 from .. import jax_compat
 
-from . import common
 
 
 def _mesh_info():
@@ -79,7 +78,6 @@ def project_scatter(h: jax.Array, w: jax.Array) -> Optional[jax.Array]:
     if mesh is None or msize <= 1 or h.ndim != 3:
         return None
     b, s, f = h.shape
-    d = w.shape[1]
     if s % msize or f % msize or not _batch_ok(b, bd, mesh):
         return None
     bspec = bd if len(bd) > 1 else (bd[0] if bd else None)

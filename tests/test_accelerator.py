@@ -9,7 +9,6 @@ import concurrent.futures as cf
 
 import numpy as np
 import pytest
-import jax.numpy as jnp
 
 import repro
 from repro import compile as rcompile

@@ -107,6 +107,67 @@ def test_cache_distinguishes_shapes_dtype_interpret():
     assert rcompile.cache_info()["misses"] == 4
 
 
+def _lower_gemm_m(m, **kw):
+    alg = small("gemm").with_bounds(m=m)
+    df = stt.apply_stt(alg, alg.loops, stt.stt_from_name("identity"))
+    return rcompile.lower(alg, df, interpret=True, validate=False, **kw)
+
+
+def test_cache_eviction_follows_recency_not_insertion():
+    """A cache hit must refresh recency: with capacity 2, touching the
+    older entry before inserting a third evicts the *other* one."""
+    rcompile.cache_clear()
+    old_cap = rcompile.cache_info()["capacity"]
+    try:
+        rcompile.cache_resize(2)
+        _lower_gemm_m(8)
+        _lower_gemm_m(16)
+        _lower_gemm_m(8)            # hit: m=8 becomes most-recently-used
+        _lower_gemm_m(24)           # evicts m=16, not m=8
+        before = rcompile.cache_info()
+        _lower_gemm_m(8)
+        after = rcompile.cache_info()
+        assert after["hits"] == before["hits"] + 1       # m=8 survived
+        _lower_gemm_m(16)
+        assert rcompile.cache_info()["misses"] == after["misses"] + 1
+    finally:
+        rcompile.cache_resize(old_cap)
+        rcompile.cache_clear()
+
+
+def test_cache_resize_below_occupancy_evicts_lru_first():
+    rcompile.cache_clear()
+    old_cap = rcompile.cache_info()["capacity"]
+    try:
+        kernels = {m: _lower_gemm_m(m) for m in (8, 16, 24)}
+        assert rcompile.cache_info()["size"] == 3
+        rcompile.cache_resize(1)
+        info = rcompile.cache_info()
+        assert info["size"] == 1 and info["capacity"] == 1
+        assert info["evictions"] == 2
+        # the survivor is the most recently used entry (m=24)
+        assert _lower_gemm_m(24) is kernels[24]
+        assert rcompile.cache_info()["hits"] == info["hits"] + 1
+    finally:
+        rcompile.cache_resize(old_cap)
+        rcompile.cache_clear()
+
+
+def test_cache_hit_auto_validates_small_problems():
+    """An entry cached via lower(validate=False) must be validated on a
+    later hit when the default auto-validate policy applies (small MACs),
+    not only on an explicit validate=True request."""
+    rcompile.cache_clear()
+    alg = small("gemm")
+    df = stt.apply_stt(alg, alg.loops, stt.stt_from_name("identity"))
+    k1 = rcompile.lower(alg, df, interpret=True, validate=False)
+    assert not k1.validated
+    assert alg.total_macs() <= rcompile.pipeline.VALIDATE_MACS_LIMIT
+    k2 = rcompile.lower(alg, df, interpret=True)         # validate=None
+    assert k2 is k1 and k2.validated
+    rcompile.cache_clear()
+
+
 def test_lower_rejects_foreign_dataflow():
     g = small("gemm")
     mt = small("mttkrp")
@@ -137,7 +198,6 @@ def test_blocks_come_from_shared_tile_chooser():
 # ---------------------------------------------------------------------------
 
 def test_operand_stationary_vmem_check_raises():
-    import jax
     a = jnp.zeros((256, 32), jnp.float32)
     b = jnp.zeros((32, 32), jnp.float32)
     with pytest.raises(ValueError, match="VMEM"):

@@ -4,7 +4,6 @@ All kernels run in interpret=True mode (CPU container; TPU is the target).
 """
 import numpy as np
 import pytest
-import jax
 import jax.numpy as jnp
 try:
     from hypothesis import given, settings, strategies as st
@@ -12,8 +11,7 @@ except ImportError:                       # seed image lacks hypothesis
     from _hypothesis_compat import given, settings, st
 
 from repro.core import algebra, stt, plan
-from repro.kernels import flash_attention as fa
-from repro.kernels import ops, ref, ssd_scan, stt_gemm
+from repro.kernels import ops, ref, stt_gemm
 
 
 RNG = np.random.default_rng(42)

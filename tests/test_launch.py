@@ -1,13 +1,11 @@
 """Launch-layer tests: HLO analyzer units + a miniature dry-run cell
 (subprocess with 8 fake devices — the full 512-device sweep is
 `python -m repro.launch.dryrun`, recorded in EXPERIMENTS.md)."""
-import json
 import os
 import subprocess
 import sys
 import textwrap
 
-import pytest
 
 from repro.launch import hlo_analysis as H
 
@@ -159,8 +157,6 @@ def test_dryrun_cell_smoke_8_devices():
 
 def test_input_specs_all_cells_constructible():
     """Every (arch x shape) cell must build its specs (no device state)."""
-    import jax
-
     from repro.launch import specs
     from repro import jax_compat
     mesh = jax_compat.make_mesh((1, 1), ("data", "model"))

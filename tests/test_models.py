@@ -7,7 +7,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.configs import ARCH_IDS, SHAPES, cells_for, get_config
+from repro.configs import ARCH_IDS, cells_for, get_config
 from repro.models import forward, init_params, split
 from repro.models.decode import decode_step, prefill
 from repro.optim.adamw import AdamWConfig

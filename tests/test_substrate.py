@@ -1,7 +1,6 @@
 """Substrate tests: optimizer, data pipeline, checkpointing (atomic/async/
 elastic), fault-tolerant runtime, straggler watchdog, serve engine."""
 import os
-import shutil
 
 import jax
 import jax.numpy as jnp
@@ -13,10 +12,9 @@ from repro.configs import get_config
 from repro.data.pipeline import DataConfig, SyntheticPipeline
 from repro.models import init_params, split
 from repro.optim import adamw
-from repro.runtime.driver import (RunConfig, SimulatedFailure, TrainDriver,
+from repro.runtime.driver import (RunConfig, TrainDriver,
                                   run_with_restarts)
 from repro.serve.engine import DecodeEngine, ServeConfig
-from repro.train import trainer
 
 
 # ---------------------------------------------------------------------------
@@ -39,7 +37,6 @@ class TestAdamW:
         assert float(loss(params)) < 1e-2
 
     def test_8bit_state_tracks_fp32(self):
-        params = self.quad_params()
         loss = lambda p: sum(jnp.sum(x ** 2) for x in jax.tree.leaves(p))
         outs = {}
         for bits in (32, 8):
