@@ -6,6 +6,8 @@ Sections:
   fig5   — normalized dataflow performance per tensor algebra (cycle model)
   fig6   — GEMM / depthwise-conv design-space area+power sweep
   sparse — block-sparse GEMM: BSR kernel parity + compressed-format costs
+  batch_fold — grid-folded vs block-diagonal batch execution (MAC ratio +
+         wall time; oracle parity)
   table3 — MM throughput comparison (XLA baselines + TPU roofline projection)
   roofline — aggregated dry-run roofline table (if results/dryrun exists)
 """
@@ -49,6 +51,15 @@ def main() -> None:
         sparse_gemm.main()
     except Exception:
         failures.append("sparse")
+        traceback.print_exc()
+
+    _section("Batch fold — grid-folded vs block-diagonal execution")
+    try:
+        from benchmarks import batch_fold
+        sys.argv = ["batch_fold", "--smoke"]
+        batch_fold.main()
+    except Exception:
+        failures.append("batch_fold")
         traceback.print_exc()
 
     _section("Table III — matmul throughput comparison")

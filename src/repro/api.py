@@ -108,10 +108,15 @@ class Accelerator:
 
     def describe(self) -> str:
         df = self.dataflow
+        rep = self.cost_report()
+        form = self.kernel.form
         lines = [f"Accelerator({self.algebra.name} x {df.name})",
                  f"  kernel: template={self.template} "
                  f"blocks={self.kernel.blocks} "
-                 f"resident={self.plan.kernel.resident_tensor}"]
+                 + (f"batch={form.batch} " if form.batch else "")
+                 + f"resident={self.plan.kernel.resident_tensor}",
+                 f"  macs:   executed={rep.executed_macs} "
+                 f"ratio={rep.executed_mac_ratio:.2f} (executed/priced)"]
         if self.algebra.is_sparse:
             dens = " ".join(f"{name}:{self.algebra.density_of(name):.3f}"
                             for name, _ in self.algebra.sparsity)
@@ -134,7 +139,7 @@ class Accelerator:
         if self._mesh_prog is None:
             from .dist import comm_engine
             self._mesh_prog = comm_engine.compile_comm_plan(
-                self.plan.comm, self.kernel.gemm, self.mesh,
+                self.plan.comm, self.kernel.form, self.mesh,
                 dtype=self.kernel.dtype)
         return self._mesh_prog
 
@@ -145,9 +150,9 @@ class Accelerator:
         # same dtype cast + sparsity-pattern enforcement as the single-chip
         # path, so both levels compute the same function of the operands
         cast = k.cast_operands(operands)
-        lhs, rhs = k.gemm.prepare(cast)
+        lhs, rhs = k.form.prepare(cast)
         out2d = self._program()(lhs, rhs)
-        return k.gemm.finish(out2d)
+        return k.form.finish(out2d)
 
     def sharded(self, mesh: "jax.sharding.Mesh", *,
                 sparse: str = "dense") -> "Accelerator":

@@ -1,24 +1,28 @@
 """TensorLib compile pipeline: (TensorAlgebra, Dataflow) -> executable.
 
 Public API:
-    lower               — plan + GEMM-ize + tile + cache -> CompiledKernel
-    gemmize / GemmForm  — algebra lowering onto the GEMM templates
-    default_dataflow    — output-stationary STT over the first three loops
+    lower                  — plan + lower + tile + cache -> CompiledKernel
+    lower_form/LoweredForm — algebra lowering onto the batched-matmul
+                             templates (grid-folded batch dims; ``gemmize``
+                             / ``GemmForm`` kept as back-compat aliases)
+    default_dataflow       — output-stationary STT over the first three loops
     cache_info / cache_clear / cache_resize — bounded-LRU compile cache
 
 The paper's pipeline is ``algebra + STT -> dataflow -> hardware``; this
 package is the last arrow on TPU: the dataflow classification selects a
 Pallas template (core/plan.py), the algebra is lowered onto that
-template's GEMM interface (lowering.py), and the shared tile chooser
+template's batched-matmul interface (lowering.py) so the executed MACs
+equal the algebra's, and the shared batch-aware tile chooser
 (core/tiling.py) fixes the block sizes the cost model already priced.
 """
-from .lowering import GemmForm, OperandSparsity, gemmize
+from .lowering import (GemmForm, LoweredForm, OperandSparsity, gemmize,
+                       lower_form)
 from .pipeline import (CompiledKernel, DEFAULT_CACHE_CAPACITY,
                        VALIDATE_MACS_LIMIT, cache_clear, cache_info,
                        cache_resize, default_dataflow, lower)
 
 __all__ = [
-    "CompiledKernel", "DEFAULT_CACHE_CAPACITY", "GemmForm",
+    "CompiledKernel", "DEFAULT_CACHE_CAPACITY", "GemmForm", "LoweredForm",
     "OperandSparsity", "VALIDATE_MACS_LIMIT", "cache_clear", "cache_info",
-    "cache_resize", "default_dataflow", "gemmize", "lower",
+    "cache_resize", "default_dataflow", "gemmize", "lower", "lower_form",
 ]

@@ -1,23 +1,33 @@
-"""Algebra lowering: GEMM-ize every Table II tensor algebra.
+"""Algebra lowering: map every Table II tensor algebra onto the templates.
 
 TensorLib's reuse argument (paper §V) is that a small set of hardware
 templates covers every tensor algebra.  On the TPU retarget the templates
 are the three Pallas GEMM kernels in ``kernels/stt_gemm.py`` — so to make
 *every* ``get_algebra`` name executable the non-GEMM algebras must be
-expressed as one 2-D matmul plus cheap data-layout prep:
+expressed as one (optionally batched) matmul plus cheap data-layout prep:
 
-    gemm            C = A @ B^T                        (transpose)
-    batched_gemv    block-diagonal lhs over the batch  (batch folding)
-    conv2d          im2col patches x reshaped weights  (paper's conv = GEMM)
-    depthwise_conv  im2col + per-channel block-diagonal weights
+    gemm            C = A @ B^T                         (transpose)
+    batched_gemv    per-batch (1,k)x(k,n) on the grid   (grid-folded batch)
+    conv2d          im2col patches x reshaped weights   (paper's conv = GEMM)
+    depthwise_conv  per-channel im2col x (1,pq) weights (grid-folded channel)
     mttkrp          mode-1 unfolding x Khatri-Rao product
     ttmc            mode-1 unfolding x Kronecker product
 
-Each lowering yields a :class:`GemmForm`: the 2-D problem dims, which loop
-iterators each GEMM dim folds (so the STT tile choice maps onto Pallas
-block sizes), which algebra tensors feed the lhs/rhs (so VMEM residency
-from the KernelPlan maps onto the ``stationary`` operand), and
-prepare/finish callables that move operands into and out of matrix form.
+Each lowering yields a :class:`LoweredForm`: the batched-matmul problem
+dims ``out[b, m, n] = lhs[b|·, m, k] @ rhs[b|·, k, n]`` (``batch=()``
+degenerates to the plain 2-D GEMM), which loop iterators each dim folds
+(so the STT tile choice maps onto Pallas block sizes), which algebra
+tensors feed the lhs/rhs (so VMEM residency from the KernelPlan maps onto
+the ``stationary`` operand), and prepare/finish callables that move
+operands into and out of matrix form.
+
+Batch loops that index an operand *and* the output (batched_gemv's batch,
+depthwise_conv's channel) become leading **grid** dimensions of the Pallas
+templates — never contraction padding — so the executed kernel performs
+exactly the algebra's MACs and ``CostReport.executed_macs`` matches what
+``PaperCycleModel`` prices.  (The retired block-diagonal GEMM-ization,
+which zero-padded the contraction and executed batch× the useful work,
+survives only as a test oracle in ``kernels/ref.py``.)
 
 The prep work is pure jnp layout code (reshape/slice/broadcast) — the MACs
 all run inside the selected Pallas template, which is the point.
@@ -25,6 +35,7 @@ all run inside the selected Pallas template, which is the point.
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Callable, Dict, FrozenSet, Mapping, Optional, Tuple
 
 import jax
@@ -62,19 +73,33 @@ class OperandSparsity:
 
 
 @dataclasses.dataclass(frozen=True)
-class GemmForm:
-    """A 2-D matmul view of a tensor algebra: out2d = lhs2d @ rhs2d."""
+class LoweredForm:
+    """A rank-aware batched-matmul view of a tensor algebra:
+
+        out[b, m, n] = lhs[b|·, m, k] @ rhs[b|·, k, n]
+
+    ``batch`` holds the sizes of the leading (grid-parallel) batch dims;
+    ``()`` degenerates to the plain 2-D GEMM every dense non-batched
+    algebra uses.  ``lhs_batched`` / ``rhs_batched`` record whether
+    ``prepare`` emits that operand with the leading batch dim (un-batched
+    operands broadcast across the batch grid axis via their index maps).
+    """
 
     m: int
     n: int
     k: int
-    #: which loop iterators each GEMM dim folds, e.g. conv2d k = (c, p, q)
+    #: which loop iterators each dim folds, e.g. conv2d k = (c, p, q);
+    #: the "b" key lists the batch loops folded onto the grid axis
     dim_loops: Mapping[str, Tuple[str, ...]]
     #: algebra tensors feeding each matmul operand (residency mapping)
     lhs_tensors: FrozenSet[str]
     rhs_tensors: FrozenSet[str]
     prepare: Callable[[Operands], Tuple[jax.Array, jax.Array]]
     finish: Callable[[jax.Array], jax.Array]
+    #: leading batch-dim sizes; () = no batch grid axis
+    batch: Tuple[int, ...] = ()
+    lhs_batched: bool = False
+    rhs_batched: bool = False
     #: structured block-sparse operand (at most one: the BSR kernel takes
     #: one coordinate list); None for dense algebras
     sparse: Optional[OperandSparsity] = None
@@ -84,96 +109,109 @@ class GemmForm:
     #: block-skipping speedup is lost)
     masked_sparse: Tuple[str, ...] = ()
 
+    @property
+    def batch_size(self) -> int:
+        """Total batch grid extent (1 when the form is a plain GEMM)."""
+        return math.prod(self.batch) if self.batch else 1
+
+    @property
+    def executed_macs(self) -> int:
+        """MACs the lowered kernel actually performs: one per grid point
+        of the batched matmul.  The BSR grid visits only nonzero blocks,
+        so a structured sparse operand scales this by its block density.
+        Equal to ``alg.total_macs()`` for every registry algebra — the
+        grid-folded refactor's invariant."""
+        executed = self.batch_size * self.m * self.n * self.k
+        if self.sparse is not None:
+            executed = round(executed * self.sparse.density)
+        return max(1, executed)
+
+
+#: back-compat alias: the 2-D special case (batch=()) of LoweredForm is
+#: exactly the historic GemmForm
+GemmForm = LoweredForm
+
 
 def _b(alg: TensorAlgebra, *names: str) -> Tuple[int, ...]:
     return tuple(alg.bounds[alg.loop_index(nm)] for nm in names)
+
+
+def _im2col_batched(a: jax.Array, y: int, x: int, p: int, q: int
+                    ) -> jax.Array:
+    """(C, y+p-1, x+q-1) -> (C, p * q, y * x) per-channel patch matrices,
+    (p, q)-ordered rows — matching a (p, q)-ordered weight reshape."""
+    c = a.shape[0]
+    patches = jnp.stack([a[:, pp:pp + y, qq:qq + x]
+                         for pp in range(p) for qq in range(q)], axis=1)
+    return patches.reshape(c, p * q, y * x)
 
 
 def _im2col(a: jax.Array, y: int, x: int, p: int, q: int) -> jax.Array:
     """(C, y+p-1, x+q-1) -> (C * p * q, y * x) patch matrix, C-major then
     (p, q) — matching a (C, p, q)-ordered weight reshape."""
     c = a.shape[0]
-    patches = jnp.stack([a[:, pp:pp + y, qq:qq + x]
-                         for pp in range(p) for qq in range(q)], axis=1)
-    return patches.reshape(c * p * q, y * x)
-
-
-def _block_diag_rows(rows: jax.Array) -> jax.Array:
-    """(B, K) -> (B, B*K) with row i equal to rows[i] placed in block i.
-
-    Folds a batch loop that indexes an operand *and* the output into the
-    contraction dimension: the zero blocks make cross-batch products
-    vanish, so one plain GEMM computes every batch at once.
-
-    Honesty note: the zero padding means the executed GEMM performs B x
-    the algebra's MACs (batched_gemv, depthwise_conv).  The cost model
-    prices the *algebra's* dataflow, not this dense realization — fine
-    for correctness-oriented execution, wasteful at production batch
-    sizes; ROADMAP has an open item to move the batch loop into the
-    Pallas grid instead.
-    """
-    b = rows.shape[0]
-    return (jnp.eye(b, dtype=rows.dtype)[:, :, None]
-            * rows[None, :, :]).reshape(b, -1)
+    return _im2col_batched(a, y, x, p, q).reshape(c * p * q, y * x)
 
 
 # ---------------------------------------------------------------------------
 # Per-algebra lowerings (Table II)
 # ---------------------------------------------------------------------------
 
-def _gemmize_gemm(alg: TensorAlgebra) -> GemmForm:
+def _lower_gemm(alg: TensorAlgebra) -> LoweredForm:
     m, n, k = _b(alg, "m", "n", "k")
-    return GemmForm(
+    return LoweredForm(
         m, n, k,
-        {"m": ("m",), "n": ("n",), "k": ("k",)},
+        {"b": (), "m": ("m",), "n": ("n",), "k": ("k",)},
         frozenset({"A"}), frozenset({"B"}),
         prepare=lambda ops: (ops["A"], ops["B"].T),   # B is (n, k)
         finish=lambda c: c)
 
 
-def _gemmize_batched_gemv(alg: TensorAlgebra) -> GemmForm:
+def _lower_batched_gemv(alg: TensorAlgebra) -> LoweredForm:
     m, n, k = _b(alg, "m", "n", "k")
-    return GemmForm(
-        m, n, m * k,
-        {"m": ("m",), "n": ("n",), "k": ("m", "k")},
+    return LoweredForm(
+        1, n, k,
+        {"b": ("m",), "m": (), "n": ("n",), "k": ("k",)},
         frozenset({"B"}), frozenset({"A"}),
         # C[m, n] = sum_k A[m, k, n] * B[m, k]: the batch loop m indexes
-        # both inputs and the output -> fold it into the contraction with a
-        # block-diagonal lhs.
-        prepare=lambda ops: (_block_diag_rows(ops["B"]),
-                             ops["A"].reshape(m * k, n)),
-        finish=lambda c: c)
+        # both inputs and the output -> it becomes the leading grid dim,
+        # a (1, k) x (k, n) matvec per batch slice.
+        prepare=lambda ops: (ops["B"].reshape(m, 1, k), ops["A"]),
+        finish=lambda c: c.reshape(m, n),
+        batch=(m,), lhs_batched=True, rhs_batched=True)
 
 
-def _gemmize_conv2d(alg: TensorAlgebra) -> GemmForm:
+def _lower_conv2d(alg: TensorAlgebra) -> LoweredForm:
     k, c, y, x, p, q = _b(alg, "k", "c", "y", "x", "p", "q")
-    return GemmForm(
+    return LoweredForm(
         k, y * x, c * p * q,
-        {"m": ("k",), "n": ("y", "x"), "k": ("c", "p", "q")},
+        {"b": (), "m": ("k",), "n": ("y", "x"), "k": ("c", "p", "q")},
         frozenset({"B"}), frozenset({"A"}),
         prepare=lambda ops: (ops["B"].reshape(k, c * p * q),
                              _im2col(ops["A"], y, x, p, q)),
         finish=lambda o: o.reshape(k, y, x))
 
 
-def _gemmize_depthwise(alg: TensorAlgebra) -> GemmForm:
+def _lower_depthwise(alg: TensorAlgebra) -> LoweredForm:
     k, y, x, p, q = _b(alg, "k", "y", "x", "p", "q")
-    return GemmForm(
-        k, y * x, k * p * q,
-        {"m": ("k",), "n": ("y", "x"), "k": ("k", "p", "q")},
+    return LoweredForm(
+        1, y * x, p * q,
+        {"b": ("k",), "m": (), "n": ("y", "x"), "k": ("p", "q")},
         frozenset({"B"}), frozenset({"A"}),
-        # channel loop k indexes weights, activations and output -> fold it
-        # into the contraction (block-diagonal weights x im2col patches)
-        prepare=lambda ops: (_block_diag_rows(ops["B"].reshape(k, p * q)),
-                             _im2col(ops["A"], y, x, p, q)),
-        finish=lambda o: o.reshape(k, y, x))
+        # channel loop k indexes weights, activations and output -> it
+        # becomes the leading grid dim: per-channel im2col patches against
+        # that channel's (1, p*q) filter row.
+        prepare=lambda ops: (ops["B"].reshape(k, 1, p * q),
+                             _im2col_batched(ops["A"], y, x, p, q)),
+        finish=lambda o: o.reshape(k, y, x),
+        batch=(k,), lhs_batched=True, rhs_batched=True)
 
 
-def _gemmize_mttkrp(alg: TensorAlgebra) -> GemmForm:
+def _lower_mttkrp(alg: TensorAlgebra) -> LoweredForm:
     i, j, k, l = _b(alg, "i", "j", "k", "l")
-    return GemmForm(
+    return LoweredForm(
         i, j, k * l,
-        {"m": ("i",), "n": ("j",), "k": ("k", "l")},
+        {"b": (), "m": ("i",), "n": ("j",), "k": ("k", "l")},
         frozenset({"A"}), frozenset({"B", "C"}),
         # D = A_(1) @ (B Khatri-Rao C): mode-1 unfolding of A against the
         # column-wise Khatri-Rao product of the factor matrices
@@ -183,11 +221,11 @@ def _gemmize_mttkrp(alg: TensorAlgebra) -> GemmForm:
         finish=lambda d: d)
 
 
-def _gemmize_ttmc(alg: TensorAlgebra) -> GemmForm:
+def _lower_ttmc(alg: TensorAlgebra) -> LoweredForm:
     i, j, k, l, m = _b(alg, "i", "j", "k", "l", "m")
-    return GemmForm(
+    return LoweredForm(
         i, j * k, l * m,
-        {"m": ("i",), "n": ("j", "k"), "k": ("l", "m")},
+        {"b": (), "m": ("i",), "n": ("j", "k"), "k": ("l", "m")},
         frozenset({"A"}), frozenset({"B", "C"}),
         # D_(1) = A_(1) @ (B Kronecker C): Tucker-style chain contraction
         prepare=lambda ops: (ops["A"].reshape(i, l * m),
@@ -197,13 +235,13 @@ def _gemmize_ttmc(alg: TensorAlgebra) -> GemmForm:
         finish=lambda d: d.reshape(i, j, k))
 
 
-_LOWERINGS: Dict[str, Callable[[TensorAlgebra], GemmForm]] = {
-    "gemm": _gemmize_gemm,
-    "batched_gemv": _gemmize_batched_gemv,
-    "conv2d": _gemmize_conv2d,
-    "depthwise_conv": _gemmize_depthwise,
-    "mttkrp": _gemmize_mttkrp,
-    "ttmc": _gemmize_ttmc,
+_LOWERINGS: Dict[str, Callable[[TensorAlgebra], LoweredForm]] = {
+    "gemm": _lower_gemm,
+    "batched_gemv": _lower_batched_gemv,
+    "conv2d": _lower_conv2d,
+    "depthwise_conv": _lower_depthwise,
+    "mttkrp": _lower_mttkrp,
+    "ttmc": _lower_ttmc,
 }
 
 
@@ -213,7 +251,8 @@ _LOWERINGS: Dict[str, Callable[[TensorAlgebra], GemmForm]] = {
 # Each mapper takes (alg, tensor shape, Sparsity) and returns an
 # OperandSparsity on the *prepared* 2-D operand, or None when the pattern
 # has no structured image under the lowering (the caller then falls back
-# to masked-dense execution, which stays exact).
+# to masked-dense execution, which stays exact).  Batched forms have no
+# mappers: the BSR kernel is 2-D, so their patterns run masked-dense.
 
 def _sparse_gemm_A(alg: TensorAlgebra, shape, sp: Sparsity
                    ) -> Optional[OperandSparsity]:
@@ -267,10 +306,16 @@ _SPARSE_MAPPERS: Dict[Tuple[str, str], Callable] = {
 }
 
 
-def _attach_sparsity(alg: TensorAlgebra, form: GemmForm) -> GemmForm:
-    """Map every attached pattern onto the GEMM form: at most one becomes
-    the structured (BSR-executed) operand — the densest savings win when
-    several qualify — and the rest run masked-dense."""
+def _attach_sparsity(alg: TensorAlgebra, form: LoweredForm) -> LoweredForm:
+    """Map every attached pattern onto the lowered form: at most one
+    becomes the structured (BSR-executed) operand and the rest run
+    masked-dense.
+
+    Tie-break intent, explicitly: the structured slot goes to the pattern
+    with the **lowest block density** — fewest nonzero blocks, i.e. the
+    most grid stages the BSR kernel gets to skip.  Equal densities break
+    deterministically by tensor name (alphabetical).
+    """
     mapped = []
     masked = []
     for name, sp in alg.sparsity:
@@ -288,20 +333,25 @@ def _attach_sparsity(alg: TensorAlgebra, form: GemmForm) -> GemmForm:
                                masked_sparse=tuple(sorted(masked)))
 
 
-def gemmize(alg: TensorAlgebra) -> GemmForm:
-    """Lower any registry algebra to a single-GEMM form (bounds-aware).
+def lower_form(alg: TensorAlgebra) -> LoweredForm:
+    """Lower any registry algebra to its batched-matmul form (bounds-aware).
 
     Algebras carrying block-sparse patterns get them mapped onto the 2-D
-    operands here (``GemmForm.sparse`` / ``masked_sparse``); the pipeline
-    then routes the structured operand through the BSR kernel grid.
+    operands here (``LoweredForm.sparse`` / ``masked_sparse``); the
+    pipeline then routes the structured operand through the BSR kernel
+    grid.
     """
     try:
         builder = _LOWERINGS[alg.name]
     except KeyError:
         raise NotImplementedError(
-            f"no GEMM lowering registered for algebra {alg.name!r}; "
+            f"no template lowering registered for algebra {alg.name!r}; "
             f"known: {sorted(_LOWERINGS)}") from None
     form = builder(alg)
     if alg.sparsity:
         form = _attach_sparsity(alg, form)
     return form
+
+
+#: back-compat alias for the historic entry-point name
+gemmize = lower_form

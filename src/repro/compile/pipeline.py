@@ -7,12 +7,15 @@ into a runnable, validated kernel:
 
     1. ``plan.kernel_plan_for`` picks the Pallas template (paper's module
        selection, a total function of the classification),
-    2. the algebra lowering (``lowering.gemmize``) maps the loop nest onto
-       the template's 2-D GEMM interface (im2col / mode-unfolding /
-       batch-folding — the paper's template-reuse claim, in code),
-    3. the *shared* tile chooser (``core.tiling.choose_tile`` — the same
+    2. the algebra lowering (``lowering.lower_form``) maps the loop nest
+       onto the template's batched-matmul interface (im2col /
+       mode-unfolding / grid-folded batch dims — the paper's
+       template-reuse claim, in code, executing exactly the algebra's
+       MACs),
+    3. the *shared*, batch-aware tile chooser (``core.tiling`` — the same
        one the cost model prices with) maps the STT tile onto Pallas block
-       sizes, replacing the historic hard-coded 128s,
+       sizes via ``tiling.form_blocks``, replacing the historic
+       hard-coded 128s,
     4. the result is cached on (algebra, dataflow, shapes, dtype,
        interpret, backend, array config) so serving / benchmark paths
        never re-trace, and
@@ -38,7 +41,7 @@ from ..core.costmodel import CostReport, PaperCycleModel
 from ..core.stt import Dataflow
 from ..core.tiling import ArrayConfig
 from ..kernels import ops
-from .lowering import GemmForm, gemmize
+from .lowering import LoweredForm, lower_form
 
 #: auto-validate at lower time below this many MACs (a pure-python oracle
 #: loop; ~1s at the limit, so big sweep/serving shapes skip it)
@@ -57,7 +60,7 @@ class CompiledKernel:
     algebra: TensorAlgebra
     dataflow: Dataflow
     plan: plan_mod.ExecutionPlan
-    gemm: GemmForm
+    form: LoweredForm
     blocks: Tuple[int, int, int]        # (bm, bn, bk) from the STT tile
     stationary: str                     # GEMM operand pinned in VMEM
     cfg: ArrayConfig
@@ -73,15 +76,20 @@ class CompiledKernel:
         return self.plan.kernel.template
 
     @property
+    def gemm(self) -> LoweredForm:
+        """Back-compat accessor: the lowered form (historic field name)."""
+        return self.form
+
+    @property
     def sparse(self):
         """The structured block-sparse operand (OperandSparsity) or None."""
-        return self.gemm.sparse
+        return self.form.sparse
 
     @property
     def sparse_mode(self) -> str:
         """``bsr`` (grid skips zero blocks), ``masked`` (sparse algebra,
         dense execution on zero-masked operands), or ``dense``."""
-        if self.gemm.sparse is not None:
+        if self.form.sparse is not None:
             return "bsr"
         return "masked" if self.algebra.is_sparse else "dense"
 
@@ -105,9 +113,9 @@ class CompiledKernel:
 
     def __call__(self, operands: Dict[str, jax.Array]) -> jax.Array:
         cast = self.cast_operands(operands)
-        lhs, rhs = self.gemm.prepare(cast)
+        lhs, rhs = self.form.prepare(cast)
         bm, bn, bk = self.blocks
-        sp = self.gemm.sparse
+        sp = self.form.sparse
         if sp is not None:
             sp_arr, dense_arr = (lhs, rhs) if sp.side == "lhs" else (rhs, lhs)
             out2d = ops.bsr_matmul(
@@ -120,7 +128,7 @@ class CompiledKernel:
                 bm=bm, bn=bn, bk=bk, backend=self.backend,
                 interpret=self.interpret,
                 vmem_budget=self.cfg.vmem_budget_bytes)
-        return self.gemm.finish(out2d)
+        return self.form.finish(out2d)
 
     def validate(self, seed: int = 0, atol: float = 1e-3) -> float:
         """Execute on random operands and compare against the loop-nest
@@ -168,8 +176,10 @@ _STATS = {"hits": 0, "misses": 0, "evictions": 0}
 def _cache_key(alg: TensorAlgebra, df: Dataflow, cfg: ArrayConfig,
                dtype, interpret: bool, backend: str) -> Tuple:
     # alg is a frozen dataclass of tuples: it *is* the algebra signature
-    # (name + loops + bounds/shapes + access matrices).  The dataflow key
-    # adds the selection, the exact T and the per-tensor classification.
+    # (name + loops + bounds/shapes + access matrices + sparsity), and the
+    # LoweredForm — batch grid dims included — is a pure function of it,
+    # so the key needs no separate form component.  The dataflow key adds
+    # the selection, the exact T and the per-tensor classification.
     return (alg, df.selected, df.T, df.signature, cfg,
             jnp.dtype(dtype).name, interpret, backend)
 
@@ -209,19 +219,12 @@ def default_dataflow(alg: TensorAlgebra) -> Dataflow:
                              stt_mod.stt_from_name("output_stationary"))
 
 
-def _blocks_from_tile(alg: TensorAlgebra, df: Dataflow, form: GemmForm,
+def _blocks_from_tile(alg: TensorAlgebra, df: Dataflow, form: LoweredForm,
                       cfg: ArrayConfig) -> Tuple[int, int, int]:
-    """Map the STT tile (per selected loop) onto GEMM block sizes: each
-    GEMM dim's block is the product of the tiles of the loops it folds,
-    clamped to the dim."""
-    per_loop = tiling.tile_by_loop(alg, df, cfg.pe_dims)
-    out = []
-    for dim, full in (("m", form.m), ("n", form.n), ("k", form.k)):
-        b = 1
-        for loop in form.dim_loops[dim]:
-            b *= per_loop[loop]
-        out.append(max(1, min(b, full)))
-    return tuple(out)
+    """Map the STT tile (per selected loop) onto GEMM block sizes via the
+    shared, batch-aware chooser (``core.tiling.form_blocks``): loops
+    folded onto the batch grid dims never inflate a block."""
+    return tiling.form_blocks(alg, df, form, cfg.pe_dims)
 
 
 def lower(alg: TensorAlgebra, df: Optional[Dataflow] = None, *,
@@ -260,12 +263,12 @@ def lower(alg: TensorAlgebra, df: Optional[Dataflow] = None, *,
 
     ep = plan_mod.plan_for(
         df, densities={name: alg.density_of(name) for name, _ in alg.sparsity})
-    form = gemmize(alg)
+    form = lower_form(alg)
     blocks = _blocks_from_tile(alg, df, form, cfg)
     stationary = "A" if ep.kernel.resident_tensor in form.lhs_tensors \
         else "B"
     kernel = CompiledKernel(
-        algebra=alg, dataflow=df, plan=ep, gemm=form, blocks=blocks,
+        algebra=alg, dataflow=df, plan=ep, form=form, blocks=blocks,
         stationary=stationary, cfg=cfg, dtype=jnp.dtype(dtype),
         interpret=interpret, backend=backend)
     if validate or (validate is None

@@ -25,6 +25,7 @@ Two models live here:
 from __future__ import annotations
 
 import dataclasses
+import functools
 import math
 from typing import Dict, List, Optional, Sequence, Tuple
 
@@ -51,8 +52,21 @@ class CostReport:
     #: fraction of the loop nest's MACs that touch nonzero blocks
     #: (product of input-tensor block densities; 1.0 = dense)
     work_density: float = 1.0
+    #: MACs the lowered kernel actually executes, from the LoweredForm's
+    #: batched-matmul dims (batch * m * n * k, density-scaled on the BSR
+    #: path).  Equal to ``macs`` for every registry algebra now that batch
+    #: loops fold onto the Pallas grid instead of zero-padding the
+    #: contraction; a ratio above 1.0 flags an execution path doing more
+    #: work than the model prices (e.g. the masked-dense sparse fallback).
+    executed_macs: int = 0
     area_units: float = 0.0
     power_mw: float = 0.0
+
+    @property
+    def executed_mac_ratio(self) -> float:
+        """executed / priced MACs — 1.0 means the hardware does exactly
+        the work the model charges for."""
+        return self.executed_macs / self.macs if self.macs else 0.0
 
     @property
     def runtime_ms(self) -> float:
@@ -65,6 +79,23 @@ class CostReport:
 
 _row_extent = tiling.row_extent
 _is_unit_row = tiling.is_unit_row
+
+
+@functools.lru_cache(maxsize=256)
+def _lowered_executed_macs(alg: TensorAlgebra) -> Optional[int]:
+    """Executed MACs of ``alg``'s LoweredForm, or None when no lowering is
+    registered.  Memoized: the form is dataflow-independent, so one lookup
+    serves every ``evaluate`` call of a DSE sweep (the hashable algebra is
+    already the key all the other memoizations use)."""
+    # lazy import: `repro.compile` depends on this module at load time, so
+    # the reverse edge (mandated: executed MACs come *from the form* the
+    # compiler runs, not from a parallel re-derivation) resolves at call
+    # time only
+    from ..compile.lowering import lower_form
+    try:
+        return lower_form(alg).executed_macs
+    except NotImplementedError:
+        return None
 
 
 # ---------------------------------------------------------------------------
@@ -95,6 +126,17 @@ class PaperCycleModel:
         if alg.sparsity_of(name) is not None:
             return alg.density_of(name)
         return float(self.density) if self.density is not None else 1.0
+
+    def _executed_macs(self, alg: TensorAlgebra, priced_macs: int) -> int:
+        """MACs the lowered execution path performs, from the LoweredForm.
+
+        The grid-folded lowerings make this equal the algebra's MACs for
+        every registry algebra (the refactor's invariant, asserted by the
+        registry-sweep test); algebras with no registered lowering have no
+        execution path, so they are priced as themselves.
+        """
+        executed = _lowered_executed_macs(alg)
+        return priced_macs if executed is None else executed
 
     # -- tiling -------------------------------------------------------------
     def _choose_tile(self, alg: TensorAlgebra, df: Dataflow
@@ -176,12 +218,12 @@ class PaperCycleModel:
         # Fraction of stages whose blocks are all nonzero: a sparse-aware
         # array skips stages that hit a zero block of any sparse input
         # (independence approximation when several inputs are sparse).
-        # Honesty note (same stance as the block-diagonal lowerings): this
-        # prices the *algebra's* compressed-format dataflow — what the
-        # generated hardware would do.  The TPU realization only skips
-        # blocks on the BSR path (`CompiledKernel.sparse_mode == "bsr"`);
-        # the masked-dense fallback executes dense and moves the full
-        # operand, costing more than this model reports.
+        # This prices the *algebra's* compressed-format dataflow — what
+        # the generated hardware would do.  The TPU realization only
+        # skips blocks on the BSR path (`CompiledKernel.sparse_mode ==
+        # "bsr"`); the masked-dense fallback executes dense and moves the
+        # full operand — `executed_mac_ratio` > 1 reports exactly that
+        # gap.
         work = 1.0
         for t in alg.inputs:
             work *= self._density_of(alg, t.name, False)
@@ -197,6 +239,7 @@ class PaperCycleModel:
         macs = max(1, round(alg.total_macs() * work))
         peak = int(cycles * self.cfg.n_pes)
         report = CostReport(
+            executed_macs=self._executed_macs(alg, macs),
             dataflow_name=df.name,
             cycles=cycles,
             macs=macs,

@@ -112,3 +112,31 @@ def tile_by_loop(alg: TensorAlgebra, df: Dataflow,
     for name, t in zip(df.selected, tile):
         out[name] = t
     return out
+
+
+def form_blocks(alg: TensorAlgebra, df: Dataflow, form,
+                pe_dims: Tuple[int, int] = (16, 16)
+                ) -> Tuple[int, int, int]:
+    """Map the STT tile onto a lowered form's (bm, bn, bk) block sizes.
+
+    Batch-aware: loops folded onto the form's leading batch grid dims
+    (``form.dim_loops["b"]``) are executed one slice per grid step and
+    therefore never inflate any GEMM block — in particular not the
+    contraction, which is what made the retired block-diagonal lowering
+    execute batch x the algebra's MACs.  Each remaining GEMM dim's block
+    is the product of the tiles of the loops it folds, clamped to the dim
+    extent.
+
+    The per-batch-slice consequence matters for VMEM too: the
+    operand-stationary strip accumulator is (per-slice m, bn) fp32, so
+    the budget check in ``kernels/ops.stt_matmul`` sees the slice extent,
+    not batch x it.
+    """
+    per_loop = tile_by_loop(alg, df, pe_dims)
+    out = []
+    for dim, full in (("m", form.m), ("n", form.n), ("k", form.k)):
+        blk = 1
+        for loop in form.dim_loops.get(dim, ()):
+            blk *= per_loop[loop]
+        out.append(max(1, min(blk, full)))
+    return (out[0], out[1], out[2])

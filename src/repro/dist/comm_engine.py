@@ -4,7 +4,7 @@ The previous ``dist/engine.py`` shipped three hand-written, GEMM-only
 schedules (SUMMA / Cannon / ring-reduce) the user had to pick by name.
 This module replaces them with a *compiler*: ``compile_comm_plan`` takes
 the CommPlan that ``plan.comm_plan_for`` generated from the dataflow
-classification plus the algebra's :class:`~repro.compile.GemmForm`, and
+classification plus the algebra's :class:`~repro.compile.LoweredForm`, and
 emits a shard_map program over a 2-D device mesh — the chip-level
 realization of the paper's claim that one transformation matrix yields the
 complete accelerator, module selection *and connection*.
@@ -19,7 +19,7 @@ Per-tensor collective kinds map onto shard_map structure:
     psum           output partial over the reduction axes, one ``psum``
 
 Tensor kinds are folded onto the two GEMM operands through
-``GemmForm.lhs_tensors`` / ``rhs_tensors`` (a side moves the way its most
+``LoweredForm.lhs_tensors`` / ``rhs_tensors`` (a side moves the way its most
 mobile tensor does: ring > all_gather > stream > shard), and the output
 tensor's kind selects the execution strategy:
 
@@ -33,6 +33,15 @@ tensor's kind selects the execution strategy:
 The classic named schedules fall out as special cases (and are kept as
 test oracles in ``engine.py``): SUMMA is gemm x the MMT dataflow, Cannon
 is gemm x SST, ring-reduce is gemm x a K-spatial STT.
+
+Grid-folded batch dims (``LoweredForm.batch``, e.g. batched_gemv's batch
+loop or depthwise_conv's channel loop) ride along as a leading array dim:
+the batch is **replicated** across the mesh (spec ``None``) and every
+per-chip body executes the batched contraction over its m/n/k shard —
+the collectives prescribed by the plan move per-slice operand panels
+exactly as they would for the 2-D form.  (Sharding the batch dim itself
+over a mesh axis is a possible future refinement; replication keeps every
+strategy's spec algebra unchanged and the results exact.)
 
 These run on fake CPU devices (``XLA_FLAGS=--xla_force_host_platform_
 device_count=N``) in tests and on real slices unchanged.
@@ -50,10 +59,10 @@ from jax.sharding import Mesh, PartitionSpec as P
 from .. import jax_compat
 from ..core.plan import CommPlan, TensorCommPlan
 
-try:  # GemmForm only needed for isinstance-free typing
-    from ..compile.lowering import GemmForm
+try:  # LoweredForm only needed for isinstance-free typing
+    from ..compile.lowering import LoweredForm
 except Exception:  # pragma: no cover - circular-import guard
-    GemmForm = "GemmForm"  # type: ignore
+    LoweredForm = "LoweredForm"  # type: ignore
 
 #: side-kind precedence: a GEMM operand fed by several algebra tensors
 #: (mttkrp's Khatri-Rao rhs) moves the way its most mobile tensor does.
@@ -70,6 +79,8 @@ def _side_kind(by_tensor: Dict[str, TensorCommPlan],
 
 
 def _pad_dim(x: jax.Array, axis: int, mult: int) -> jax.Array:
+    """Pad ``axis`` (negative axes address from the last dim, so the same
+    call works on 2-D operands and batched rank-3 ones) up to ``mult``."""
     pad = (-x.shape[axis]) % mult
     if pad == 0:
         return x
@@ -80,12 +91,34 @@ def _pad_dim(x: jax.Array, axis: int, mult: int) -> jax.Array:
 
 def _skew(m: jax.Array, s: int, roll_axis: int, block_axis: int) -> jax.Array:
     """Cannon's initial alignment: roll block row/col ``i`` of ``m`` by
-    ``i`` k-blocks along ``roll_axis`` (pure jnp, stays on device)."""
+    ``i`` k-blocks along ``roll_axis`` (pure jnp, stays on device;
+    negative axes keep it batch-agnostic)."""
     kb = m.shape[roll_axis] // s
     blocks = jnp.split(m, s, axis=block_axis)
     rolled = [jnp.roll(blk, -i * kb, axis=roll_axis)
               for i, blk in enumerate(blocks)]
     return jnp.concatenate(rolled, axis=block_axis)
+
+
+def _contract(l: jax.Array, r: jax.Array) -> jax.Array:
+    """out[..., m, n] = l[..., m, k] @ r[..., k, n] in fp32, broadcasting
+    a leading batch dim carried by either operand — the per-chip body of
+    every strategy, rank-aware so grid-folded forms fold through the same
+    collectives as plain GEMMs."""
+    return jnp.einsum("...mk,...kn->...mn", l, r,
+                      preferred_element_type=jnp.float32)
+
+
+def _acc_init(l: jax.Array, r: jax.Array) -> jax.Array:
+    """fp32 accumulator matching ``_contract(l, r)``'s shape."""
+    bshape = jnp.broadcast_shapes(l.shape[:-2], r.shape[:-2])
+    return jnp.zeros((*bshape, l.shape[-2], r.shape[-1]), jnp.float32)
+
+
+def _spec(batched: bool, *dims) -> P:
+    """A PartitionSpec with a replicated leading batch dim when the
+    operand carries one."""
+    return P(None, *dims) if batched else P(*dims)
 
 
 def _ring_perm(size: int) -> list:
@@ -97,7 +130,7 @@ def _ring_perm(size: int) -> list:
 @dataclasses.dataclass(frozen=True)
 class MeshProgram:
     """A compiled CommPlan: the shard_map specs + ring structure chosen
-    for one (CommPlan, GemmForm, mesh) triple.  ``fn`` maps *global*
+    for one (CommPlan, LoweredForm, mesh) triple.  ``fn`` maps *global*
     (lhs2d, rhs2d) -> global out2d; specs/strategy are introspection for
     tests and docs."""
 
@@ -113,12 +146,13 @@ class MeshProgram:
         return self.fn(lhs, rhs)
 
 
-def compile_comm_plan(comm: CommPlan, form: "GemmForm", mesh: Mesh,
+def compile_comm_plan(comm: CommPlan, form: "LoweredForm", mesh: Mesh,
                       dtype=jnp.float32) -> MeshProgram:
     """Compile a generated CommPlan into an executable mesh program.
 
-    The returned program computes ``out2d = lhs2d @ rhs2d`` (the algebra's
-    GemmForm view) with every inter-chip transfer prescribed by the plan's
+    The returned program computes ``out[b?, m, n] = lhs @ rhs`` (the
+    algebra's LoweredForm view; grid-folded batch dims replicate across
+    the mesh) with every inter-chip transfer prescribed by the plan's
     per-tensor collective kinds.  Works on any 2-D mesh; dataflows whose
     plan needs two rings (Cannon-class) require a square mesh and degrade
     to all_gather multicast on a rectangular one (same reuse, realized by
@@ -170,11 +204,16 @@ def _out_stationary(form, mesh: Mesh, lhs_kind: str, rhs_kind: str,
     m is sharded over the first mesh axis and n over the second; the
     structural motion axis for the lhs is therefore the second axis (its
     reuse spans the n-direction) and vice versa — the same orientation the
-    hand-written SUMMA/Cannon engines used.
+    hand-written SUMMA/Cannon engines used.  Grid-folded batch dims are
+    replicated (leading ``None`` spec); every body contraction is
+    rank-aware via ``_contract``.
     """
     ax_x, ax_y = mesh.axis_names
     sx, sy = mesh.devices.shape
     square = sx == sy
+    lb = bool(form.batch) and form.lhs_batched
+    rb = bool(form.batch) and form.rhs_batched
+    ob = bool(form.batch)
 
     if lhs_kind == "ppermute_ring" and rhs_kind == "ppermute_ring" \
             and not square:
@@ -193,9 +232,9 @@ def _out_stationary(form, mesh: Mesh, lhs_kind: str, rhs_kind: str,
     S = sy if lhs_kind == "ppermute_ring" else \
         (sx if rhs_kind == "ppermute_ring" else 1)
 
-    in_specs = (P(ax_x, ax_y if lhs_moves else None),
-                P(ax_x if rhs_moves else None, ax_y))
-    out_spec = P(ax_x, ax_y)
+    in_specs = (_spec(lb, ax_x, ax_y if lhs_moves else None),
+                _spec(rb, ax_x if rhs_moves else None, ax_y))
+    out_spec = _spec(ob, ax_x, ax_y)
     kmult = math.lcm(sy if lhs_moves else 1, sx if rhs_moves else 1, max(S, 1))
 
     strategy = ("cannon" if double_ring else
@@ -206,12 +245,11 @@ def _out_stationary(form, mesh: Mesh, lhs_kind: str, rhs_kind: str,
 
     def body(l, r):
         if lhs_kind == "all_gather":
-            l = jax.lax.all_gather(l, ax_y, axis=1, tiled=True)
+            l = jax.lax.all_gather(l, ax_y, axis=l.ndim - 1, tiled=True)
         if rhs_kind == "all_gather":
-            r = jax.lax.all_gather(r, ax_x, axis=0, tiled=True)
+            r = jax.lax.all_gather(r, ax_x, axis=r.ndim - 2, tiled=True)
         if not ring_axes:
-            acc = jnp.dot(l, r, preferred_element_type=jnp.float32)
-            return acc.astype(dtype)
+            return _contract(l, r).astype(dtype)
 
         if double_ring:
             left = _ring_perm(sy)
@@ -219,14 +257,12 @@ def _out_stationary(form, mesh: Mesh, lhs_kind: str, rhs_kind: str,
 
             def step(t, carry):
                 l_c, r_c, acc = carry
-                acc = acc + jnp.dot(l_c, r_c,
-                                    preferred_element_type=jnp.float32)
+                acc = acc + _contract(l_c, r_c)
                 l_c = jax.lax.ppermute(l_c, ax_y, left)
                 r_c = jax.lax.ppermute(r_c, ax_x, up)
                 return l_c, r_c, acc
 
-            acc = jnp.zeros((l.shape[0], r.shape[1]), jnp.float32)
-            _, _, acc = jax.lax.fori_loop(0, S, step, (l, r, acc))
+            _, _, acc = jax.lax.fori_loop(0, S, step, (l, r, _acc_init(l, r)))
             return acc.astype(dtype)
 
         # single ring: one side circulates its k-blocks; the other side
@@ -237,37 +273,36 @@ def _out_stationary(form, mesh: Mesh, lhs_kind: str, rhs_kind: str,
         perm = _ring_perm(S)
         pos = jax.lax.axis_index(ax_ring)
         mov0 = l if ring_on_lhs else r
-        kb = mov0.shape[1] if ring_on_lhs else mov0.shape[0]
+        kb = mov0.shape[-1] if ring_on_lhs else mov0.shape[-2]
 
         def step(t, carry):
             mov, acc = carry
             idx = ((pos + t) % S) * kb
             if ring_on_lhs:
-                r_blk = jax.lax.dynamic_slice_in_dim(r, idx, kb, axis=0)
-                acc = acc + jnp.dot(mov, r_blk,
-                                    preferred_element_type=jnp.float32)
+                r_blk = jax.lax.dynamic_slice_in_dim(r, idx, kb,
+                                                     axis=r.ndim - 2)
+                acc = acc + _contract(mov, r_blk)
             else:
-                l_blk = jax.lax.dynamic_slice_in_dim(l, idx, kb, axis=1)
-                acc = acc + jnp.dot(l_blk, mov,
-                                    preferred_element_type=jnp.float32)
+                l_blk = jax.lax.dynamic_slice_in_dim(l, idx, kb,
+                                                     axis=l.ndim - 1)
+                acc = acc + _contract(l_blk, mov)
             mov = jax.lax.ppermute(mov, ax_ring, perm)
             return mov, acc
 
-        acc = jnp.zeros((l.shape[0], r.shape[1]), jnp.float32)
-        _, acc = jax.lax.fori_loop(0, S, step, (mov0, acc))
+        _, acc = jax.lax.fori_loop(0, S, step, (mov0, _acc_init(l, r)))
         return acc.astype(dtype)
 
     def run(lhs, rhs):
-        m, n, k = lhs.shape[0], rhs.shape[1], lhs.shape[1]
-        lhs = _pad_dim(_pad_dim(lhs, 0, sx), 1, kmult)
-        rhs = _pad_dim(_pad_dim(rhs, 1, sy), 0, kmult)
+        m, n = lhs.shape[-2], rhs.shape[-1]
+        lhs = _pad_dim(_pad_dim(lhs, -2, sx), -1, kmult)
+        rhs = _pad_dim(_pad_dim(rhs, -1, sy), -2, kmult)
         if double_ring:
-            lhs = _skew(lhs, sx, roll_axis=1, block_axis=0)
-            rhs = _skew(rhs, sy, roll_axis=0, block_axis=1)
+            lhs = _skew(lhs, sx, roll_axis=-1, block_axis=-2)
+            rhs = _skew(rhs, sy, roll_axis=-2, block_axis=-1)
         out = jax_compat.shard_map(
             body, mesh=mesh, in_specs=in_specs, out_specs=out_spec,
             check_vma=False)(lhs, rhs)
-        return out[:m, :n]
+        return out[..., :m, :n]
 
     return MeshProgram(strategy, in_specs, out_spec, ring_axes,
                        (sx, sy, kmult), jax.jit(run))
@@ -288,11 +323,15 @@ def _k_spatial(form, mesh: Mesh, lhs_kind: str, rhs_kind: str,
     Inputs never need off-chip k-blocks here (k is spatial), so input
     rings/multicasts along non-k axes collapse to replication — the
     time-staggering they describe is a wire-level schedule, not a
-    different data placement.
+    different data placement.  Grid-folded batch dims are replicated
+    (leading ``None`` spec), the partial products are batched.
     """
     ax_x, ax_y = mesh.axis_names
     sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
     other = next((a for a in mesh.axis_names if a not in k_axes), None)
+    lb = bool(form.batch) and form.lhs_batched
+    rb = bool(form.batch) and form.rhs_batched
+    ob = bool(form.batch)
 
     # the fully-partitioned ("shard"/"stream") input also splits its non-k
     # dim over the remaining axis; lhs wins if both claim it
@@ -300,15 +339,16 @@ def _k_spatial(form, mesh: Mesh, lhs_kind: str, rhs_kind: str,
     shard_n = other is not None and not shard_m
 
     k_spec = k_axes[0] if len(k_axes) == 1 else tuple(k_axes)
-    in_specs = (P(other if shard_m else None, k_spec),
-                P(k_spec, other if shard_n else None))
-    out_spec = P(other if shard_m else None, other if shard_n else None)
+    in_specs = (_spec(lb, other if shard_m else None, k_spec),
+                _spec(rb, k_spec, other if shard_n else None))
+    out_spec = _spec(ob, other if shard_m else None,
+                     other if shard_n else None)
     kmult = math.prod(sizes[a] for a in k_axes)
     ring_axes = k_axes if ring else ()
     S = sizes[k_axes[0]] if ring else 0
 
     def body(l, r):
-        part = jnp.dot(l, r, preferred_element_type=jnp.float32)
+        part = _contract(l, r)
         if ring:
             perm = _ring_perm(S)
 
@@ -325,17 +365,17 @@ def _k_spatial(form, mesh: Mesh, lhs_kind: str, rhs_kind: str,
         return total.astype(dtype)
 
     def run(lhs, rhs):
-        m, n = lhs.shape[0], rhs.shape[1]
-        lhs = _pad_dim(lhs, 1, kmult)
-        rhs = _pad_dim(rhs, 0, kmult)
+        m, n = lhs.shape[-2], rhs.shape[-1]
+        lhs = _pad_dim(lhs, -1, kmult)
+        rhs = _pad_dim(rhs, -2, kmult)
         if shard_m:
-            lhs = _pad_dim(lhs, 0, sizes[other])
+            lhs = _pad_dim(lhs, -2, sizes[other])
         if shard_n:
-            rhs = _pad_dim(rhs, 1, sizes[other])
+            rhs = _pad_dim(rhs, -1, sizes[other])
         out = jax_compat.shard_map(
             body, mesh=mesh, in_specs=in_specs, out_specs=out_spec,
             check_vma=False)(lhs, rhs)
-        return out[:m, :n]
+        return out[..., :m, :n]
 
     return MeshProgram("k_spatial_ring" if ring else "k_spatial",
                        in_specs, out_spec, ring_axes,
@@ -346,7 +386,8 @@ def _k_spatial(form, mesh: Mesh, lhs_kind: str, rhs_kind: str,
 # Introspection: kind -> spec table for one plan (used by docs and tests)
 # ---------------------------------------------------------------------------
 
-def describe(comm: CommPlan, form: "GemmForm", mesh: Mesh) -> Dict[str, str]:
+def describe(comm: CommPlan, form: "LoweredForm", mesh: Mesh
+             ) -> Dict[str, str]:
     """Human-readable per-tensor realization of a CommPlan on a mesh."""
     prog = compile_comm_plan(comm, form, mesh)
     lines = {"strategy": prog.strategy,

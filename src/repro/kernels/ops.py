@@ -43,22 +43,30 @@ def stt_matmul(a: jax.Array, b: jax.Array, *, template: str = "output_stationary
                ) -> jax.Array:
     """C = A @ B with the Pallas template selected by an STT dataflow.
 
-    ``vmem_budget`` caps the operand-stationary strip accumulator: when the
-    (m, bn) fp32 strip would not fit, the call falls back to the
-    output-stationary template (same math, block-local residency) instead
-    of erroring — the compile pipeline relies on this safety net.
+    Operands may carry a leading batch dim (``(B, m, k) @ (B, k, n)``; a
+    rank-2 operand broadcasts across the batch) — the templates fold it
+    onto a leading parallel grid axis, so a grid-folded algebra lowering
+    executes exactly the algebra's MACs.  Per-slice m/n/k are padded to
+    block multiples; the batch dim never needs padding (batch block = 1).
+
+    ``vmem_budget`` caps the operand-stationary strip accumulator, which
+    is allocated **per batch slice**: when the per-slice (m, bn) fp32
+    strip would not fit, the call falls back to the output-stationary
+    template (same math, block-local residency) instead of erroring — the
+    compile pipeline relies on this safety net.
     """
     if backend == "xla":
         return _ref.matmul_ref(a, b)
-    m, k = a.shape
-    _, n = b.shape
+    m, k = a.shape[-2:]
+    n = b.shape[-1]
     bm, bn, bk = min(bm, m), min(bn, n), min(bk, k)
-    ap = _pad_to(a, (bm, bk))
-    bp = _pad_to(b, (bk, bn))
+    ap = _pad_to(a, (1,) * (a.ndim - 2) + (bm, bk))
+    bp = _pad_to(b, (1,) * (b.ndim - 2) + (bk, bn))
     if template == "operand_stationary" and vmem_budget is not None:
-        # the strip extent follows the *streamed-output* dimension: M for
-        # stationary B, N for stationary A (transposition symmetry)
-        strip_len = ap.shape[0] if stationary == "B" else bp.shape[1]
+        # the strip extent follows the *streamed-output* dimension of one
+        # batch slice: M for stationary B, N for stationary A
+        # (transposition symmetry)
+        strip_len = ap.shape[-2] if stationary == "B" else bp.shape[-1]
         strip_bn = bn if stationary == "B" else bm
         if _gemm.operand_stationary_strip_bytes(strip_len, strip_bn) \
                 > vmem_budget:
@@ -74,7 +82,7 @@ def stt_matmul(a: jax.Array, b: jax.Array, *, template: str = "output_stationary
         out = _gemm.matmul_reduction_tree(ap, bp, **kw)
     else:
         raise ValueError(f"unknown template {template!r}")
-    return out[:m, :n]
+    return out[..., :m, :n]
 
 
 @functools.partial(jax.jit, static_argnames=(

@@ -19,9 +19,69 @@ import jax.numpy as jnp
 
 def matmul_ref(a: jax.Array, b: jax.Array,
                out_dtype: Optional[jnp.dtype] = None) -> jax.Array:
-    """C[m, n] = sum_k A[m, k] B[k, n] with fp32 accumulation."""
-    out = jnp.dot(a, b, preferred_element_type=jnp.float32)
+    """C[..., m, n] = sum_k A[..., m, k] B[..., k, n], fp32 accumulation.
+
+    A leading batch dim on either operand broadcasts against the other
+    (the XLA path of the grid-folded batched templates); plain rank-2
+    inputs reproduce the historic 2-D behaviour exactly.
+    """
+    out = jnp.einsum("...mk,...kn->...mn", a, b,
+                     preferred_element_type=jnp.float32)
     return out.astype(out_dtype or a.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Retired block-diagonal GEMM-ization — kept as a test-only oracle
+# ---------------------------------------------------------------------------
+# Until the grid-folded refactor, batched_gemv and depthwise_conv lowered
+# onto the dense templates by zero-padding their batch/channel loop into
+# the contraction with a block-diagonal operand: exact, but the executed
+# GEMM performed batch x the algebra's MACs.  The construction lives on
+# here so tests can assert the grid-folded path is bit-exact against it
+# (integer-valued operands make both paths exact at any dtype) and so
+# benchmarks/batch_fold.py can measure what retiring it bought.
+
+def block_diag_rows(rows: jax.Array) -> jax.Array:
+    """(B, K) -> (B, B*K) with row i equal to rows[i] placed in block i.
+
+    The zero blocks make cross-batch products vanish, so one plain GEMM
+    computes every batch at once — at batch x the useful MACs.
+    """
+    b = rows.shape[0]
+    return (jnp.eye(b, dtype=rows.dtype)[:, :, None]
+            * rows[None, :, :]).reshape(b, -1)
+
+
+def _im2col_oracle(a: jax.Array, y: int, x: int, p: int, q: int
+                   ) -> jax.Array:
+    """(C, y+p-1, x+q-1) -> (C*p*q, y*x), C-major then (p, q) — written
+    as explicit loops, independently of the lowering's stacked version."""
+    rows = []
+    for cc in range(a.shape[0]):
+        for pp in range(p):
+            for qq in range(q):
+                rows.append(a[cc, pp:pp + y, qq:qq + x].reshape(y * x))
+    return jnp.stack(rows)
+
+
+def batched_gemv_blockdiag_ref(a: jax.Array, b: jax.Array,
+                               out_dtype: Optional[jnp.dtype] = None
+                               ) -> jax.Array:
+    """C[m, n] = sum_k A[m, k, n] * B[m, k] via the retired lowering:
+    block_diag(B) (m, m*k) @ A.reshape(m*k, n)."""
+    m, k, n = a.shape
+    return matmul_ref(block_diag_rows(b), a.reshape(m * k, n),
+                      out_dtype=out_dtype)
+
+
+def depthwise_blockdiag_ref(a: jax.Array, b: jax.Array, *, y: int, x: int
+                            ) -> jax.Array:
+    """C[k, y, x] = sum_{p,q} A[k, y+p, x+q] * B[k, p, q] via the retired
+    lowering: block_diag(B) (k, k*p*q) @ im2col(A) (k*p*q, y*x)."""
+    k, p, q = b.shape
+    out = matmul_ref(block_diag_rows(b.reshape(k, p * q)),
+                     _im2col_oracle(a, y, x, p, q))
+    return out.reshape(k, y, x)
 
 
 # ---------------------------------------------------------------------------

@@ -18,15 +18,24 @@ choices (DESIGN.md §2, level 1).  One template per stationary choice:
   MXU pass — the combinational-adder-tree analogue.  Requires K blocks to
   fit VMEM.
 
-All grids are (parallel..., arbitrary) with the revisited axis innermost, so
-the Mosaic pipeline double-buffers streamed operands (compute/DMA overlap).
-Block shapes default to the MXU-aligned 128 and are validated in
-``interpret=True`` mode on CPU (tests sweep shapes and dtypes).
+Every template carries a leading **batch grid axis** (parallel, outermost):
+operands may be rank 3 — ``(B, m, k) @ (B, k, n)`` — with a rank-2 operand
+broadcast across the batch via its BlockSpec index map (the batch
+coordinate is pinned to 0).  This is how the grid-folded algebra lowerings
+(batched_gemv's batch loop, depthwise_conv's channel loop) execute exactly
+the algebra's MACs: the batch iterator is a grid dimension, never
+contraction padding.  Rank-2 inputs take the degenerate batch=1 path and
+return rank-2 outputs, so plain GEMM call sites are unchanged.
+
+All grids end with the revisited axis innermost, so the Mosaic pipeline
+double-buffers streamed operands (compute/DMA overlap).  Block shapes
+default to the MXU-aligned 128 and are validated in ``interpret=True``
+mode on CPU (tests sweep shapes, batches and dtypes).
 """
 from __future__ import annotations
 
 import functools
-from typing import Optional
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -47,9 +56,42 @@ def _validate(m, n, k, bm, bn, bk):
                          f"({bm},{bn},{bk}); ops.stt_matmul pads first")
 
 
+def _as_batched(a: jax.Array, b: jax.Array
+                ) -> Tuple[jax.Array, jax.Array, int, bool]:
+    """Lift operands to rank 3 under a shared leading batch extent.
+
+    A rank-2 operand becomes ``(1, m, k)`` and broadcasts across the batch
+    grid axis (its index map pins the batch coordinate to 0).  Returns
+    ``(a3, b3, nb, squeeze)`` where ``squeeze`` says both inputs were 2-D
+    and the caller should return a rank-2 output.
+    """
+    if a.ndim not in (2, 3) or b.ndim not in (2, 3):
+        raise ValueError(f"operands must be rank 2 or 3, got "
+                         f"{a.shape} x {b.shape}")
+    squeeze = a.ndim == 2 and b.ndim == 2
+    a3 = a if a.ndim == 3 else a[None]
+    b3 = b if b.ndim == 3 else b[None]
+    nb = max(a3.shape[0], b3.shape[0])
+    if a3.shape[0] not in (1, nb) or b3.shape[0] not in (1, nb):
+        raise ValueError(f"batch dims must match or broadcast, got "
+                         f"{a.shape} x {b.shape}")
+    return a3, b3, nb, squeeze
+
+
+def _bspec(block: Tuple[int, int], batched: bool, imap):
+    """A rank-3 BlockSpec with batch block 1: ``imap`` gives the 2-D block
+    coordinate; un-batched operands pin the batch coordinate to 0."""
+    if batched:
+        return pl.BlockSpec((1,) + block,
+                            lambda bb, *ij: (bb,) + imap(*ij))
+    return pl.BlockSpec((1,) + block, lambda bb, *ij: (0,) + imap(*ij))
+
+
 def operand_stationary_strip_bytes(m: int, bn: int) -> int:
     """VMEM footprint of the (m, bn) fp32 strip accumulator the
-    operand-stationary template allocates (see matmul_operand_stationary)."""
+    operand-stationary template allocates **per batch slice** (the batch
+    grid axis is outermost, so only one slice's strip is live at a time —
+    see matmul_operand_stationary)."""
     return m * bn * 4
 
 
@@ -58,14 +100,14 @@ def operand_stationary_strip_bytes(m: int, bn: int) -> int:
 # ---------------------------------------------------------------------------
 
 def _os_kernel(a_ref, b_ref, o_ref, acc_ref, *, n_k: int, out_dtype):
-    @pl.when(pl.program_id(2) == 0)
+    @pl.when(pl.program_id(3) == 0)
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
-    acc_ref[...] += jnp.dot(a_ref[...], b_ref[...],
+    acc_ref[...] += jnp.dot(a_ref[0], b_ref[0],
                             preferred_element_type=jnp.float32)
-    @pl.when(pl.program_id(2) == n_k - 1)
+    @pl.when(pl.program_id(3) == n_k - 1)
     def _flush():
-        o_ref[...] = acc_ref[...].astype(out_dtype)
+        o_ref[0] = acc_ref[...].astype(out_dtype)
 
 
 def matmul_output_stationary(a: jax.Array, b: jax.Array, *,
@@ -74,23 +116,29 @@ def matmul_output_stationary(a: jax.Array, b: jax.Array, *,
                              out_dtype=None, interpret: bool = False
                              ) -> jax.Array:
     from jax.experimental.pallas import tpu as pltpu
-    (m, k), (_, n) = a.shape, b.shape
+    a3, b3, nb, squeeze = _as_batched(a, b)
+    (m, k), n = a3.shape[1:], b3.shape[2]
     _validate(m, n, k, bm, bn, bk)
     out_dtype = out_dtype or a.dtype
     n_k = k // bk
     kernel = functools.partial(_os_kernel, n_k=n_k, out_dtype=out_dtype)
-    return pl.pallas_call(
+    out = pl.pallas_call(
         kernel,
-        grid=(m // bm, n // bn, n_k),
-        in_specs=[pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
-                  pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j))],
-        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        grid=(nb, m // bm, n // bn, n_k),
+        in_specs=[_bspec((bm, bk), a3.shape[0] > 1,
+                         lambda i, j, kk: (i, kk)),
+                  _bspec((bk, bn), b3.shape[0] > 1,
+                         lambda i, j, kk: (kk, j))],
+        out_specs=pl.BlockSpec((1, bm, bn),
+                               lambda bb, i, j, kk: (bb, i, j)),
+        out_shape=jax.ShapeDtypeStruct((nb, m, n), out_dtype),
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
         compiler_params=_compat.CompilerParams(
-            dimension_semantics=("parallel", "parallel", "arbitrary")),
+            dimension_semantics=("parallel", "parallel", "parallel",
+                                 "arbitrary")),
         interpret=interpret,
-    )(a, b)
+    )(a3, b3)
+    return out[0] if squeeze else out
 
 
 # ---------------------------------------------------------------------------
@@ -100,20 +148,20 @@ def matmul_output_stationary(a: jax.Array, b: jax.Array, *,
 # D1), so the streamed-output systolic module (b) becomes a VMEM *strip*
 # accumulator: while the stationary operand block is pinned, the entire
 # output strip it contributes to lives in VMEM and the other operand streams
-# past it.  VMEM bound: strip_len * block * 4B (checked).
+# past it.  VMEM bound: strip_len * block * 4B per batch slice (checked).
 
 def _ws_kernel(a_ref, b_ref, o_ref, acc_ref, *, n_k: int, bm: int,
                out_dtype):
-    kk, i = pl.program_id(1), pl.program_id(2)
+    kk, i = pl.program_id(2), pl.program_id(3)
     sl = pl.ds(i * bm, bm)
     @pl.when(kk == 0)
     def _init():
         acc_ref[sl, :] = jnp.zeros_like(acc_ref[sl, :])
-    acc_ref[sl, :] += jnp.dot(a_ref[...], b_ref[...],
+    acc_ref[sl, :] += jnp.dot(a_ref[0], b_ref[0],
                               preferred_element_type=jnp.float32)
     @pl.when(kk == n_k - 1)
     def _flush():
-        o_ref[...] = acc_ref[sl, :].astype(out_dtype)
+        o_ref[0] = acc_ref[sl, :].astype(out_dtype)
 
 
 def matmul_operand_stationary(a: jax.Array, b: jax.Array, *,
@@ -123,51 +171,61 @@ def matmul_operand_stationary(a: jax.Array, b: jax.Array, *,
                               out_dtype=None, interpret: bool = False,
                               vmem_budget: Optional[int] = DEFAULT_VMEM_BUDGET
                               ) -> jax.Array:
-    """``stationary='B'``: grid (n, k, m) keeps the B block pinned while A
-    streams (weight-stationary);  ``stationary='A'`` is the symmetric
-    input-stationary template (implemented by transposition symmetry:
-    C^T = B^T A^T with B^T stationary).
+    """``stationary='B'``: grid (batch, n, k, m) keeps the B block pinned
+    while A streams (weight-stationary);  ``stationary='A'`` is the
+    symmetric input-stationary template (implemented by transposition
+    symmetry: C^T = B^T A^T with B^T stationary, batch dims untouched).
 
-    The strip accumulator scratch is (m, bn) fp32 — a VMEM residency that
-    grows with the *full* M extent, not a block.  ``vmem_budget`` bounds it
-    (pass None to skip the check); ``ops.stt_matmul`` auto-falls-back to the
-    output-stationary template instead of tripping this error.
+    The strip accumulator scratch is (m, bn) fp32 per batch slice — a VMEM
+    residency that grows with the *full* per-slice M extent, not a block
+    (the batch grid axis is outermost, so slices reuse one strip).
+    ``vmem_budget`` bounds it (pass None to skip the check);
+    ``ops.stt_matmul`` auto-falls-back to the output-stationary template
+    instead of tripping this error.
     """
     from jax.experimental.pallas import tpu as pltpu
     if stationary == "A":
-        return matmul_operand_stationary(
-            b.T, a.T, stationary="B", bm=bn, bn=bm, bk=bk,
+        out = matmul_operand_stationary(
+            jnp.swapaxes(b, -1, -2), jnp.swapaxes(a, -1, -2),
+            stationary="B", bm=bn, bn=bm, bk=bk,
             out_dtype=out_dtype, interpret=interpret,
-            vmem_budget=vmem_budget).T
+            vmem_budget=vmem_budget)
+        return jnp.swapaxes(out, -1, -2)
     if stationary != "B":
         raise ValueError(stationary)
-    (m, k), (_, n) = a.shape, b.shape
+    a3, b3, nb, squeeze = _as_batched(a, b)
+    (m, k), n = a3.shape[1:], b3.shape[2]
     _validate(m, n, k, bm, bn, bk)
     strip = operand_stationary_strip_bytes(m, bn)
     if vmem_budget is not None and strip > vmem_budget:
         raise ValueError(
             f"operand-stationary strip accumulator needs {strip} bytes of "
-            f"VMEM ((m={m}) x (bn={bn}) x 4B) but the budget is "
-            f"{vmem_budget}; shrink bn, tile m outside the kernel, or use "
-            f"the output_stationary template (ops.stt_matmul falls back "
-            f"automatically)")
+            f"VMEM per batch slice ((m={m}) x (bn={bn}) x 4B) but the "
+            f"budget is {vmem_budget}; shrink bn, tile m outside the "
+            f"kernel, or use the output_stationary template "
+            f"(ops.stt_matmul falls back automatically)")
     out_dtype = out_dtype or a.dtype
     n_k = k // bk
     kernel = functools.partial(_ws_kernel, n_k=n_k, bm=bm,
                                out_dtype=out_dtype)
-    return pl.pallas_call(
+    out = pl.pallas_call(
         kernel,
-        grid=(n // bn, n_k, m // bm),
-        in_specs=[pl.BlockSpec((bm, bk), lambda j, kk, i: (i, kk)),
+        grid=(nb, n // bn, n_k, m // bm),
+        in_specs=[_bspec((bm, bk), a3.shape[0] > 1,
+                         lambda j, kk, i: (i, kk)),
                   # B block constant along the inner m axis -> VMEM-resident
-                  pl.BlockSpec((bk, bn), lambda j, kk, i: (kk, j))],
-        out_specs=pl.BlockSpec((bm, bn), lambda j, kk, i: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+                  _bspec((bk, bn), b3.shape[0] > 1,
+                         lambda j, kk, i: (kk, j))],
+        out_specs=pl.BlockSpec((1, bm, bn),
+                               lambda bb, j, kk, i: (bb, i, j)),
+        out_shape=jax.ShapeDtypeStruct((nb, m, n), out_dtype),
         scratch_shapes=[pltpu.VMEM((m, bn), jnp.float32)],
         compiler_params=_compat.CompilerParams(
-            dimension_semantics=("parallel", "arbitrary", "arbitrary")),
+            dimension_semantics=("parallel", "parallel", "arbitrary",
+                                 "arbitrary")),
         interpret=interpret,
-    )(a, b)
+    )(a3, b3)
+    return out[0] if squeeze else out
 
 
 # ---------------------------------------------------------------------------
@@ -175,30 +233,31 @@ def matmul_operand_stationary(a: jax.Array, b: jax.Array, *,
 # ---------------------------------------------------------------------------
 
 def _rt_kernel(a_ref, b_ref, o_ref, *, out_dtype):
-    o_ref[...] = jnp.dot(a_ref[...], b_ref[...],
-                         preferred_element_type=jnp.float32).astype(out_dtype)
+    o_ref[0] = jnp.dot(a_ref[0], b_ref[0],
+                       preferred_element_type=jnp.float32).astype(out_dtype)
 
 
 def matmul_reduction_tree(a: jax.Array, b: jax.Array, *,
                           bm: int = DEFAULT_BLOCK, bn: int = DEFAULT_BLOCK,
                           out_dtype=None, interpret: bool = False
                           ) -> jax.Array:
-    from jax.experimental.pallas import tpu as pltpu
-    (m, k), (_, n) = a.shape, b.shape
+    a3, b3, nb, squeeze = _as_batched(a, b)
+    (m, k), n = a3.shape[1:], b3.shape[2]
     _validate(m, n, k, bm, bn, k)
     out_dtype = out_dtype or a.dtype
     kernel = functools.partial(_rt_kernel, out_dtype=out_dtype)
-    return pl.pallas_call(
+    out = pl.pallas_call(
         kernel,
-        grid=(m // bm, n // bn),
-        in_specs=[pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
-                  pl.BlockSpec((k, bn), lambda i, j: (0, j))],
-        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        grid=(nb, m // bm, n // bn),
+        in_specs=[_bspec((bm, k), a3.shape[0] > 1, lambda i, j: (i, 0)),
+                  _bspec((k, bn), b3.shape[0] > 1, lambda i, j: (0, j))],
+        out_specs=pl.BlockSpec((1, bm, bn), lambda bb, i, j: (bb, i, j)),
+        out_shape=jax.ShapeDtypeStruct((nb, m, n), out_dtype),
         compiler_params=_compat.CompilerParams(
-            dimension_semantics=("parallel", "parallel")),
+            dimension_semantics=("parallel", "parallel", "parallel")),
         interpret=interpret,
-    )(a, b)
+    )(a3, b3)
+    return out[0] if squeeze else out
 
 
 TEMPLATES = {
