@@ -80,6 +80,11 @@ class Accelerator:
     #: DSE candidates considered when built via ``generate(search=...)``,
     #: best first; ``candidates[0]`` is the one this accelerator runs.
     candidates: Optional[Tuple[Tuple[CostReport, Dataflow], ...]] = None
+    #: mesh-execution options forwarded to the CommPlan interpreter:
+    #: sparse shipping mode ("auto" | "bsr" | "dense") and batch sharding
+    #: (False = replicating baseline, for footprint A/B comparisons)
+    sparse_mode_mesh: str = "auto"
+    shard_batch: bool = True
     _mesh_prog: Optional[object] = dataclasses.field(
         default=None, repr=False, compare=False)
 
@@ -106,6 +111,16 @@ class Accelerator:
         config) — same tile chooser the executed blocks come from."""
         return self.kernel.cost_report()
 
+    @property
+    def partition(self):
+        """The solved per-tensor mesh partition
+        (:class:`~repro.core.plan.PartitionSolution`); requires a bound
+        mesh."""
+        if self.mesh is None:
+            raise ValueError("partition requires a mesh-bound accelerator; "
+                             "call .sharded(mesh) first")
+        return self._program().solution
+
     def describe(self) -> str:
         df = self.dataflow
         rep = self.cost_report()
@@ -120,18 +135,33 @@ class Accelerator:
         if self.algebra.is_sparse:
             dens = " ".join(f"{name}:{self.algebra.density_of(name):.3f}"
                             for name, _ in self.algebra.sparsity)
-            lines.append(f"  sparse: mode={self.kernel.sparse_mode} {dens}"
-                         + (" (mesh: dense replication)"
-                            if self.mesh is not None else ""))
+            skip = ""
+            if form.batch_keep is not None:
+                skip = (f" batch_slices={len(form.batch_keep)}"
+                        f"/{form.batch_full[0]}")
+            lines.append(f"  sparse: mode={self.kernel.sparse_mode} "
+                         f"{dens}{skip}")
         kinds = " ".join(
             f"{t.tensor}:{t.kind}"
             + (f"[{','.join(t.mesh_axes)}]" if t.mesh_axes else "")
             for t in self.plan.comm.tensors)
         lines.append(f"  comm:   {kinds}")
         if self.mesh is not None:
-            prog = self._program()
-            lines.append(f"  mesh:   {dict(zip(self.mesh.axis_names, self.mesh.devices.shape))}"
-                         f" strategy={prog.strategy}")
+            sol = self.partition
+            lines.append(
+                f"  mesh:   {dict(zip(self.mesh.axis_names, self.mesh.devices.shape))}"
+                f" strategy={sol.strategy}"
+                + (f" batch_axis={sol.batch_axis}" if sol.batch_axis
+                   else ""))
+            eb = self.kernel.dtype.itemsize
+            stored = sol.per_device_bytes(form, eb)
+            moved = sol.comm_bytes(form, eb)
+            for tp in sol.sides:
+                names = "+".join(tp.tensors)
+                lines.append(
+                    f"    {tp.side} ({names}): {tp.describe()} "
+                    f"stored={stored[tp.side]:.0f}B/dev "
+                    f"comm={moved[tp.side]:.0f}B/dev")
         return "\n".join(lines)
 
     # -- execution --------------------------------------------------------
@@ -140,7 +170,8 @@ class Accelerator:
             from .dist import comm_engine
             self._mesh_prog = comm_engine.compile_comm_plan(
                 self.plan.comm, self.kernel.form, self.mesh,
-                dtype=self.kernel.dtype)
+                dtype=self.kernel.dtype, shard_batch=self.shard_batch,
+                sparse=self.sparse_mode_mesh)
         return self._mesh_prog
 
     def __call__(self, operands: Dict[str, jax.Array]) -> jax.Array:
@@ -155,29 +186,37 @@ class Accelerator:
         return k.form.finish(out2d)
 
     def sharded(self, mesh: "jax.sharding.Mesh", *,
-                sparse: str = "dense") -> "Accelerator":
+                sparse: str = "auto",
+                shard_batch: bool = True) -> "Accelerator":
         """Bind this accelerator to a 2-D device mesh: execution becomes
         the CommPlan interpreter's shard_map program (chip-level wires),
-        with the same plan driving both levels.
+        with the same :class:`~repro.core.plan.PartitionSolution` driving
+        both levels.
 
-        Sparse algebras fall back to **dense replication** between chips
-        (``sparse='dense'``, the default): operands move in masked-dense
-        form and every transfer/collective is the one the CommPlan
-        prescribes, so results stay exact — only the intra-chip
-        block-skipping is given up.  ``sparse='bsr'`` (shipping the
-        compressed blocks through the collectives) is not implemented;
-        requesting it raises rather than silently densifying.
+        Structured block-sparse operands ship **compressed** by default
+        (``sparse='auto'``/``'bsr'``): each device holds only its shard's
+        nonzero blocks plus their block-COO coordinates, and the CommPlan
+        collectives move that payload — no device materializes the dense
+        operand.  ``sparse='dense'`` requests the masked-dense shipping
+        baseline (exact, but every transfer moves zero blocks too), kept
+        for footprint comparisons.  ``shard_batch=False`` likewise keeps
+        the replicating-batch baseline.
         """
-        if sparse not in ("dense", "bsr"):
-            raise ValueError(f"sparse must be 'dense' or 'bsr', "
+        if sparse not in ("auto", "bsr", "dense"):
+            raise ValueError(f"sparse must be 'auto', 'bsr' or 'dense', "
                              f"got {sparse!r}")
-        if sparse == "bsr":
-            raise NotImplementedError(
-                "block-sparse multi-chip execution (compressed blocks "
-                "through the CommPlan collectives) is not supported yet; "
-                "use sparse='dense' — operands are replicated/sharded in "
-                "masked-dense form and results remain exact")
-        return dataclasses.replace(self, mesh=mesh, _mesh_prog=None)
+        form = self.kernel.form
+        if sparse == "bsr" and (form.sparse is None or form.batch):
+            # an explicit compressed request must not silently densify:
+            # masked-mode and batched sparse forms have no structured 2-D
+            # operand the collectives could ship as BSR payload
+            raise ValueError(
+                "sparse='bsr' requested but this form has no structured "
+                "2-D sparse operand (masked-dense / batched patterns); "
+                "use sparse='auto' (compresses whenever possible) or "
+                "'dense'")
+        return dataclasses.replace(self, mesh=mesh, sparse_mode_mesh=sparse,
+                                   shard_batch=shard_batch, _mesh_prog=None)
 
     def validate(self, seed: int = 0, atol: float = 1e-3) -> float:
         """Run on random operands and compare against ``alg.reference``.

@@ -108,6 +108,15 @@ class LoweredForm:
     #: are zero-masked, so the dense templates stay exact; only the
     #: block-skipping speedup is lost)
     masked_sparse: Tuple[str, ...] = ()
+    #: for batched forms with sparse operands: the original batch-slice
+    #: indices the kernel executes (slices whose sparse operands are
+    #: entirely zero blocks produce exactly-zero output slices and are
+    #: skipped; ``prepare``/``finish`` compact and re-expand the batch
+    #: axis).  None = every slice executes.
+    batch_keep: Optional[Tuple[int, ...]] = None
+    #: original batch extent before slice skipping (``batch`` holds the
+    #: compacted extent so every consumer scales with executed work)
+    batch_full: Optional[Tuple[int, ...]] = None
 
     @property
     def batch_size(self) -> int:
@@ -333,13 +342,75 @@ def _attach_sparsity(alg: TensorAlgebra, form: LoweredForm) -> LoweredForm:
                                masked_sparse=tuple(sorted(masked)))
 
 
+def _batch_keep(alg: TensorAlgebra, form: LoweredForm
+                ) -> Optional[Tuple[int, ...]]:
+    """Batch slices the kernel must execute for a sparse batched form.
+
+    The batched lowerings run masked-dense (the BSR kernel is 2-D), but a
+    block pattern still maps **per batch slice**: a slice whose sparse
+    operands hold only zero blocks produces an exactly-zero output slice
+    and can be skipped outright.  Any sparse input whose leading tensor
+    dim *is* the batch iterator (batched_gemv's A/B over m,
+    depthwise_conv's A/B over the channel) constrains the kept set; when
+    several do, a slice survives only if nonzero in all of them (the
+    output is their product).  Returns None when every slice executes.
+    """
+    if len(form.batch) != 1 or not alg.sparsity:
+        return None
+    bloops = form.dim_loops.get("b", ())
+    if len(bloops) != 1:
+        return None
+    bcol = alg.loop_index(bloops[0])
+    b = form.batch[0]
+    keep = None
+    for name, sp in alg.sparsity:
+        t = next(t for t in alg.tensors if t.name == name)
+        row0 = t.access[0]
+        if not (row0[bcol] == 1 and sum(abs(v) for v in row0) == 1):
+            continue              # leading dim is not the batch iterator
+        nz = set()
+        for c in sp.coords:
+            lo = c[0] * sp.block[0]
+            nz.update(range(lo, min(b, lo + sp.block[0])))
+        keep = nz if keep is None else (keep & nz)
+    if keep is None or len(keep) == b:
+        return None
+    return tuple(sorted(keep)) or (0,)
+
+
+def _compact_batch(form: LoweredForm, keep: Tuple[int, ...]) -> LoweredForm:
+    """Wrap prepare/finish to execute only the kept batch slices (the
+    skipped ones are exactly zero under the enforced patterns)."""
+    idx = jnp.asarray(keep, jnp.int32)
+    b_full = form.batch[0]
+    orig_prepare, orig_finish = form.prepare, form.finish
+
+    def prepare(ops: Operands) -> Tuple[jax.Array, jax.Array]:
+        lhs, rhs = orig_prepare(ops)
+        if form.lhs_batched:
+            lhs = jnp.take(lhs, idx, axis=0)
+        if form.rhs_batched:
+            rhs = jnp.take(rhs, idx, axis=0)
+        return lhs, rhs
+
+    def finish(o: jax.Array) -> jax.Array:
+        full = jnp.zeros((b_full, *o.shape[1:]), o.dtype).at[idx].set(o)
+        return orig_finish(full)
+
+    return dataclasses.replace(form, batch=(len(keep),), prepare=prepare,
+                               finish=finish, batch_keep=keep,
+                               batch_full=form.batch)
+
+
 def lower_form(alg: TensorAlgebra) -> LoweredForm:
     """Lower any registry algebra to its batched-matmul form (bounds-aware).
 
     Algebras carrying block-sparse patterns get them mapped onto the 2-D
     operands here (``LoweredForm.sparse`` / ``masked_sparse``); the
     pipeline then routes the structured operand through the BSR kernel
-    grid.
+    grid.  Sparse *batched* forms map their patterns per batch slice:
+    all-zero slices are skipped (``batch_keep``), so ``executed_macs``
+    scales with the nonzero slice count instead of the full batch.
     """
     try:
         builder = _LOWERINGS[alg.name]
@@ -350,6 +421,9 @@ def lower_form(alg: TensorAlgebra) -> LoweredForm:
     form = builder(alg)
     if alg.sparsity:
         form = _attach_sparsity(alg, form)
+        keep = _batch_keep(alg, form)
+        if keep is not None:
+            form = _compact_batch(form, keep)
     return form
 
 

@@ -88,10 +88,24 @@ class CompiledKernel:
     @property
     def sparse_mode(self) -> str:
         """``bsr`` (grid skips zero blocks), ``masked`` (sparse algebra,
-        dense execution on zero-masked operands), or ``dense``."""
+        dense execution on zero-masked operands; batched forms skip
+        all-zero batch slices — see ``LoweredForm.batch_keep``), or
+        ``dense``."""
         if self.form.sparse is not None:
             return "bsr"
         return "masked" if self.algebra.is_sparse else "dense"
+
+    def partition_for(self, shape: Tuple[int, int],
+                      axes: Tuple[str, str] = ("x", "y"), *,
+                      shard_batch: bool = True,
+                      compressed: Optional[bool] = None):
+        """Solve this kernel's mesh partition for a mesh shape without
+        binding devices (:func:`repro.core.plan.solve_partition` over the
+        generated CommPlan + this LoweredForm) — what the cost model, the
+        DSE and ``Accelerator.describe()`` consume."""
+        return plan_mod.solve_partition(
+            self.plan.comm, self.form, axes=axes, shape=shape,
+            shard_batch=shard_batch, compressed=compressed)
 
     def cast_operands(self, operands: Dict[str, jax.Array]
                       ) -> Dict[str, jax.Array]:

@@ -61,6 +61,15 @@ class CostReport:
     executed_macs: int = 0
     area_units: float = 0.0
     power_mw: float = 0.0
+    #: multi-chip terms, filled by ``mesh_evaluate`` from the solved
+    #: :class:`~repro.core.plan.PartitionSolution`; zero / empty when the
+    #: report was priced single-chip
+    mesh_shape: Optional[Tuple[int, int]] = None
+    mesh_strategy: str = ""
+    per_device_macs: int = 0
+    mesh_comm_bytes: Dict[str, float] = dataclasses.field(
+        default_factory=dict)
+    mesh_cycles: float = 0.0
 
     @property
     def executed_mac_ratio(self) -> float:
@@ -82,10 +91,10 @@ _is_unit_row = tiling.is_unit_row
 
 
 @functools.lru_cache(maxsize=256)
-def _lowered_executed_macs(alg: TensorAlgebra) -> Optional[int]:
-    """Executed MACs of ``alg``'s LoweredForm, or None when no lowering is
-    registered.  Memoized: the form is dataflow-independent, so one lookup
-    serves every ``evaluate`` call of a DSE sweep (the hashable algebra is
+def _lowered_form(alg: TensorAlgebra):
+    """``alg``'s LoweredForm, or None when no lowering is registered.
+    Memoized: the form is dataflow-independent, so one lookup serves
+    every ``evaluate`` call of a DSE sweep (the hashable algebra is
     already the key all the other memoizations use)."""
     # lazy import: `repro.compile` depends on this module at load time, so
     # the reverse edge (mandated: executed MACs come *from the form* the
@@ -93,9 +102,14 @@ def _lowered_executed_macs(alg: TensorAlgebra) -> Optional[int]:
     # time only
     from ..compile.lowering import lower_form
     try:
-        return lower_form(alg).executed_macs
+        return lower_form(alg)
     except NotImplementedError:
         return None
+
+
+def _lowered_executed_macs(alg: TensorAlgebra) -> Optional[int]:
+    form = _lowered_form(alg)
+    return None if form is None else form.executed_macs
 
 
 # ---------------------------------------------------------------------------
@@ -307,3 +321,56 @@ class PaperCycleModel:
             energy += (b / self.cfg.elem_bytes) * 0.8
         per_cycle = energy / max(1.0, report.cycles)
         return per_cycle * self.POWER_SCALE_MW
+
+
+# ---------------------------------------------------------------------------
+# Multi-chip pricing — collective cost terms from the PartitionSolution
+# ---------------------------------------------------------------------------
+
+#: inter-chip link bandwidth per 320 MHz cycle (≈41 GB/s per direction —
+#: ICI-class), the denominator for collective stall terms
+INTERCHIP_BYTES_PER_CYCLE = 128.0
+
+
+def mesh_evaluate(alg: TensorAlgebra, df: Dataflow,
+                  shape: Tuple[int, int],
+                  cfg: ArrayConfig = ArrayConfig(),
+                  axes: Tuple[str, str] = ("x", "y"),
+                  density: Optional[float] = None,
+                  shard_batch: bool = True,
+                  report: Optional[CostReport] = None) -> CostReport:
+    """Single-chip evaluation plus multi-chip terms priced from the solved
+    :class:`~repro.core.plan.PartitionSolution`.
+
+    Per-device compute shrinks by the solver's ``macs_split`` (which is
+    where the batch-shard speedup shows up); collective terms charge the
+    bytes each device *receives* — per-hop shard bytes for rings and
+    gathers, nnz-scaled payloads (plus block-COO metadata) for compressed
+    sides, reduction hops for psum / staggered outputs.  ``mesh_cycles``
+    = per-device compute cycles + collective cycles, the quantity
+    ``dse.search(mesh=...)`` ranks by.  Pass ``report`` to reuse an
+    already-computed single-chip evaluation (the DSE does: one model
+    pass per candidate, not two).
+    """
+    from . import plan as plan_mod
+    if report is None:
+        report = PaperCycleModel(cfg, density=density).evaluate(alg, df)
+    form = _lowered_form(alg)
+    if form is None:
+        return report
+    comm = plan_mod.comm_plan_for(
+        df, axes, densities={name: alg.density_of(name)
+                             for name, _ in alg.sparsity})
+    sol = plan_mod.solve_partition(comm, form, axes=axes, shape=shape,
+                                   shard_batch=shard_batch)
+    comm_bytes = sol.comm_bytes(form, cfg.elem_bytes)
+    per_dev = sol.per_device_macs(form)
+    compute_cycles = report.cycles * per_dev / max(1, form.executed_macs)
+    comm_cycles = sum(comm_bytes.values()) / INTERCHIP_BYTES_PER_CYCLE
+    return dataclasses.replace(
+        report,
+        mesh_shape=tuple(shape),
+        mesh_strategy=sol.strategy,
+        per_device_macs=sol.per_device_macs(form),
+        mesh_comm_bytes=comm_bytes,
+        mesh_cycles=compute_cycles + comm_cycles)

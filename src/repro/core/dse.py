@@ -238,11 +238,21 @@ def sweep(alg: TensorAlgebra,
     return [r for r, _ in sweep_with_dataflows(alg, cfg, selections, density)]
 
 
+def _mesh_shape(mesh) -> Tuple[int, int]:
+    """Normalize a mesh argument: a (rows, cols) tuple or a
+    ``jax.sharding.Mesh``."""
+    if hasattr(mesh, "devices"):
+        return tuple(mesh.devices.shape)
+    s0, s1 = mesh
+    return (int(s0), int(s1))
+
+
 def search(alg: TensorAlgebra, top_k: int = 5,
            cfg: ArrayConfig = ArrayConfig(),
            selections: Optional[Sequence[Tuple[str, ...]]] = None,
            objective=None,
            density: Optional[float] = None,
+           mesh=None,
            ) -> List[Tuple[CostReport, Dataflow]]:
     """Ranked design-space search: the DSE as an API the front door eats.
 
@@ -257,9 +267,26 @@ def search(alg: TensorAlgebra, top_k: int = 5,
     Sparsity` patterns is priced with its per-tensor block densities and
     compressed-format traffic terms automatically; ``density`` applies a
     uniform input-density override instead when no pattern is attached.
+
+    Multi-chip ranking: with ``mesh=`` (a ``jax.sharding.Mesh`` or a
+    (rows, cols) shape) every candidate is priced by
+    :func:`~repro.core.costmodel.mesh_evaluate` — per-device compute from
+    the solved partition's spatial split plus collective stall terms —
+    and ranked by ``mesh_cycles``: a dataflow that replicates less and
+    ships smaller payloads wins even when its single-chip cycles tie.
     """
-    key = objective or (lambda r: (r.cycles, r.area_units, r.power_mw))
     pairs = sweep_with_dataflows(alg, cfg, selections, density)
+    if mesh is not None:
+        from .costmodel import mesh_evaluate
+        shape = _mesh_shape(mesh)
+        pairs = [(mesh_evaluate(alg, df, shape, cfg, density=density,
+                                report=rep), df)
+                 for rep, df in pairs]
+        key = objective or (lambda r: (r.mesh_cycles, r.cycles,
+                                       r.area_units, r.power_mw))
+        ranked = sorted(pairs, key=lambda p: key(p[0]))
+        return ranked[:top_k] if top_k else ranked
+    key = objective or (lambda r: (r.cycles, r.area_units, r.power_mw))
     front_ids = {id(r) for r in pareto_front([r for r, _ in pairs])}
     ranked = sorted(pairs,
                     key=lambda p: (id(p[0]) not in front_ids, key(p[0])))

@@ -1,81 +1,59 @@
 """Generic CommPlan interpreter: any generated CommPlan -> shard_map.
 
-The previous ``dist/engine.py`` shipped three hand-written, GEMM-only
-schedules (SUMMA / Cannon / ring-reduce) the user had to pick by name.
-This module replaces them with a *compiler*: ``compile_comm_plan`` takes
-the CommPlan that ``plan.comm_plan_for`` generated from the dataflow
-classification plus the algebra's :class:`~repro.compile.LoweredForm`, and
-emits a shard_map program over a 2-D device mesh — the chip-level
-realization of the paper's claim that one transformation matrix yields the
-complete accelerator, module selection *and connection*.
+``compile_comm_plan`` takes the CommPlan that ``plan.comm_plan_for``
+generated from the dataflow classification plus the algebra's
+:class:`~repro.compile.LoweredForm`, and emits a shard_map program over a
+2-D device mesh — the chip-level realization of the paper's claim that one
+transformation matrix yields the complete accelerator, module selection
+*and connection*.
 
-Per-tensor collective kinds map onto shard_map structure:
+Since the unified-partition refactor this module contains **no per-strategy
+shard/replicate decisions**: every placement, motion and degradation comes
+from ``plan.solve_partition`` — the :class:`~repro.core.plan.
+PartitionSolution` maps every LoweredForm dim (batch, m, n, k, and sparse
+block coordinates) onto mesh axes once, and this module only materializes
+it:
 
-    shard          fully partitioned in/out specs, no collective
-    stream         fully partitioned (unicast: no reuse to exploit)
-    all_gather     stored k-split, ``jax.lax.all_gather`` inside the body
-    ppermute_ring  stored k-split + skewed, rotated by ``jax.lax.ppermute``
-                   inside a ``fori_loop`` (the systolic wires, chip-scale)
-    psum           output partial over the reduction axes, one ``psum``
-
-Tensor kinds are folded onto the two GEMM operands through
-``LoweredForm.lhs_tensors`` / ``rhs_tensors`` (a side moves the way its most
-mobile tensor does: ring > all_gather > stream > shard), and the output
-tensor's kind selects the execution strategy:
-
-    output shard / stream  -> block-stationary output (SUMMA / Cannon /
-                              hybrid single-ring, by input kinds)
-    output psum            -> contraction spatial over the psum axes
-    output ppermute_ring   -> contraction spatial over the ring axis,
-                              reduced by an accumulate-rotate ppermute ring
-    output all_gather      -> 2-D reduction tree: psum over both axes
+    * stored layouts      -> shard_map ``PartitionSpec``s (one per side),
+    * ``all_gather`` motion -> ``jax.lax.all_gather(..., tiled=True)``,
+    * ``ppermute_ring`` motion -> rotation schedules in ``fori_loop``s,
+    * batch grid dims     -> sharded over their mesh axis (replication only
+      as the solver's degenerate solution),
+    * compressed sides    -> per-device BSR payload + block-COO coordinate
+      lists shipped through the same gathers/rings (never densified),
+    * input-systolic dt   -> the staggered accumulate-rotate schedule
+      (``k_spatial_stagger``): device r adds its partial for output chunk
+      ``(r - t) mod S`` at step t, so the mobile tensor stores 1/S per
+      device instead of a full replica.
 
 The classic named schedules fall out as special cases (and are kept as
 test oracles in ``engine.py``): SUMMA is gemm x the MMT dataflow, Cannon
 is gemm x SST, ring-reduce is gemm x a K-spatial STT.
 
-Grid-folded batch dims (``LoweredForm.batch``, e.g. batched_gemv's batch
-loop or depthwise_conv's channel loop) ride along as a leading array dim:
-the batch is **replicated** across the mesh (spec ``None``) and every
-per-chip body executes the batched contraction over its m/n/k shard —
-the collectives prescribed by the plan move per-slice operand panels
-exactly as they would for the 2-D form.  (Sharding the batch dim itself
-over a mesh axis is a possible future refinement; replication keeps every
-strategy's spec algebra unchanged and the results exact.)
-
 These run on fake CPU devices (``XLA_FLAGS=--xla_force_host_platform_
-device_count=N``) in tests and on real slices unchanged.
+device_count=N``) in tests and on real slices unchanged; degenerate
+meshes (1x1, 1xN, Nx1) and non-divisible shard shapes are handled by the
+same padding every strategy applies.
 """
 from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Callable, Dict, FrozenSet, Tuple
+from typing import Callable, Dict, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
 from .. import jax_compat
-from ..core.plan import CommPlan, TensorCommPlan
+from ..core import plan as plan_mod
+from ..core.plan import CommPlan, PartitionSolution, TensorPartition
 
 try:  # LoweredForm only needed for isinstance-free typing
     from ..compile.lowering import LoweredForm
 except Exception:  # pragma: no cover - circular-import guard
     LoweredForm = "LoweredForm"  # type: ignore
-
-#: side-kind precedence: a GEMM operand fed by several algebra tensors
-#: (mttkrp's Khatri-Rao rhs) moves the way its most mobile tensor does.
-_KIND_ORDER = ("ppermute_ring", "all_gather", "stream", "shard")
-
-
-def _side_kind(by_tensor: Dict[str, TensorCommPlan],
-               tensors: FrozenSet[str]) -> str:
-    kinds = {by_tensor[t].kind for t in tensors if t in by_tensor}
-    for k in _KIND_ORDER:
-        if k in kinds:
-            return k
-    return "shard"
 
 
 def _pad_dim(x: jax.Array, axis: int, mult: int) -> jax.Array:
@@ -91,8 +69,7 @@ def _pad_dim(x: jax.Array, axis: int, mult: int) -> jax.Array:
 
 def _skew(m: jax.Array, s: int, roll_axis: int, block_axis: int) -> jax.Array:
     """Cannon's initial alignment: roll block row/col ``i`` of ``m`` by
-    ``i`` k-blocks along ``roll_axis`` (pure jnp, stays on device;
-    negative axes keep it batch-agnostic)."""
+    ``i`` k-blocks along ``roll_axis``."""
     kb = m.shape[roll_axis] // s
     blocks = jnp.split(m, s, axis=block_axis)
     rolled = [jnp.roll(blk, -i * kb, axis=roll_axis)
@@ -102,9 +79,7 @@ def _skew(m: jax.Array, s: int, roll_axis: int, block_axis: int) -> jax.Array:
 
 def _contract(l: jax.Array, r: jax.Array) -> jax.Array:
     """out[..., m, n] = l[..., m, k] @ r[..., k, n] in fp32, broadcasting
-    a leading batch dim carried by either operand — the per-chip body of
-    every strategy, rank-aware so grid-folded forms fold through the same
-    collectives as plain GEMMs."""
+    a leading batch dim carried by either operand."""
     return jnp.einsum("...mk,...kn->...mn", l, r,
                       preferred_element_type=jnp.float32)
 
@@ -115,151 +90,326 @@ def _acc_init(l: jax.Array, r: jax.Array) -> jax.Array:
     return jnp.zeros((*bshape, l.shape[-2], r.shape[-1]), jnp.float32)
 
 
-def _spec(batched: bool, *dims) -> P:
-    """A PartitionSpec with a replicated leading batch dim when the
-    operand carries one."""
-    return P(None, *dims) if batched else P(*dims)
-
-
 def _ring_perm(size: int) -> list:
-    """Rotate data one hop backwards: position r receives block r+1, so
-    after t steps position r holds its (r + t)-th block."""
+    """Rotate data one hop backwards: position r receives block r+1."""
     return [(j, (j - 1) % size) for j in range(size)]
+
+
+def _fwd_perm(size: int) -> list:
+    """Rotate data one hop forwards: position r sends to r+1 (the
+    staggered accumulator schedule's direction)."""
+    return [(j, (j + 1) % size) for j in range(size)]
+
+
+def _spec_of(tp: TensorPartition) -> P:
+    """The stored layout of one side, as a shard_map PartitionSpec."""
+    return P(*tp.placement)
 
 
 @dataclasses.dataclass(frozen=True)
 class MeshProgram:
     """A compiled CommPlan: the shard_map specs + ring structure chosen
     for one (CommPlan, LoweredForm, mesh) triple.  ``fn`` maps *global*
-    (lhs2d, rhs2d) -> global out2d; specs/strategy are introspection for
-    tests and docs."""
+    (lhs2d, rhs2d) -> global out; ``solution`` is the partition the
+    program materializes (introspection for tests, docs and the cost
+    model)."""
 
     strategy: str                       # summa | cannon | ring | k_spatial...
     in_specs: Tuple[P, P]
     out_spec: P
     ring_axes: Tuple[str, ...]
-    pads: Tuple[int, int, int]          # padded (m, n, k)
+    pads: Tuple[int, int, int]          # padding multiples for (m, n, k)
+    solution: PartitionSolution = None
     fn: Callable[[jax.Array, jax.Array], jax.Array] = \
         dataclasses.field(repr=False, default=None)
 
     def __call__(self, lhs: jax.Array, rhs: jax.Array) -> jax.Array:
         return self.fn(lhs, rhs)
 
+    def footprint(self, form: "LoweredForm", elem_bytes: int = 4
+                  ) -> Dict[str, float]:
+        """Per-device stored bytes per side (the solver's accounting)."""
+        return self.solution.per_device_bytes(form, elem_bytes)
+
 
 def compile_comm_plan(comm: CommPlan, form: "LoweredForm", mesh: Mesh,
-                      dtype=jnp.float32) -> MeshProgram:
+                      dtype=jnp.float32, *, shard_batch: bool = True,
+                      sparse: str = "auto") -> MeshProgram:
     """Compile a generated CommPlan into an executable mesh program.
 
     The returned program computes ``out[b?, m, n] = lhs @ rhs`` (the
-    algebra's LoweredForm view; grid-folded batch dims replicate across
-    the mesh) with every inter-chip transfer prescribed by the plan's
-    per-tensor collective kinds.  Works on any 2-D mesh; dataflows whose
-    plan needs two rings (Cannon-class) require a square mesh and degrade
-    to all_gather multicast on a rectangular one (same reuse, realized by
-    the multicast wires instead of the systolic ones).
+    algebra's LoweredForm view) with every inter-chip transfer prescribed
+    by the :class:`~repro.core.plan.PartitionSolution` the plan solves to:
+    batch grid dims shard a mesh axis, structured block-sparse operands
+    ship compressed, and systolic plans run their rotation schedules.
+
+    ``shard_batch=False`` requests the replicating-batch baseline and
+    ``sparse="dense"`` the masked-dense shipping baseline (both kept for
+    footprint A/B comparisons); ``sparse="auto"``/``"bsr"`` ship the
+    structured operand compressed whenever the form has one.
     """
     if len(mesh.axis_names) != 2:
         raise ValueError(f"comm_engine needs a 2-D mesh, got axes "
                          f"{mesh.axis_names}")
-    ax_x, ax_y = mesh.axis_names
-    sx, sy = mesh.devices.shape
-
-    by = comm.by_tensor()
-    out_tp = comm.tensors[-1]
-    lhs_kind = _side_kind(by, form.lhs_tensors)
-    rhs_kind = _side_kind(by, form.rhs_tensors)
-    out_kind = out_tp.kind
+    if sparse not in ("auto", "bsr", "dense"):
+        raise ValueError(f"sparse must be 'auto', 'bsr' or 'dense', "
+                         f"got {sparse!r}")
+    compressed = None if sparse == "auto" else (sparse == "bsr")
+    sol = plan_mod.solve_partition(
+        comm, form, axes=tuple(mesh.axis_names),
+        shape=tuple(mesh.devices.shape), shard_batch=shard_batch,
+        compressed=compressed)
+    if sparse == "bsr" and not (sol.lhs.compressed or sol.rhs.compressed):
+        raise ValueError(
+            "sparse='bsr' requested but the solved partition ships no "
+            "compressed side (no structured 2-D sparse operand); use "
+            "sparse='auto' or 'dense'")
     dt = jnp.dtype(dtype)
-
-    if out_kind in ("shard", "stream"):
-        return _out_stationary(form, mesh, lhs_kind, rhs_kind, dt)
-    if out_kind == "psum":
-        axes = tuple(a for a in out_tp.mesh_axes if a in mesh.axis_names) \
-            or (ax_x,)
-        return _k_spatial(form, mesh, lhs_kind, rhs_kind, axes, dt,
-                          ring=False)
-    if out_kind == "ppermute_ring":
-        axes = (out_tp.mesh_axis if out_tp.mesh_axis in mesh.axis_names
-                else ax_y,)
-        return _k_spatial(form, mesh, lhs_kind, rhs_kind, axes, dt,
-                          ring=True)
-    if out_kind == "all_gather":
-        # broadcast-class output: rank-2 reuse plane ⊥ t — the paper's 2-D
-        # reduction tree; on the mesh a psum over both axes
-        return _k_spatial(form, mesh, lhs_kind, rhs_kind, (ax_x, ax_y), dt,
-                          ring=False)
-    raise ValueError(f"unknown output collective kind {out_kind!r}")
+    if sol.strategy in ("summa", "cannon", "ring_hybrid",
+                        "multicast_hybrid", "local"):
+        return _build_out_stationary(sol, form, mesh, dt)
+    return _build_k_spatial(sol, form, mesh, dt)
 
 
 # ---------------------------------------------------------------------------
-# Strategy 1: output blocks stationary (shard / stream output)
+# Compressed-operand shipping: per-device BSR payload + coordinate lists
 # ---------------------------------------------------------------------------
 
-def _out_stationary(form, mesh: Mesh, lhs_kind: str, rhs_kind: str,
-                    dtype) -> MeshProgram:
-    """Output (m, n) blocks resident on their chip; the contraction is
-    delivered by gathers (multicast wires), rings (systolic wires), or
-    local full-k residency (stationary / unicast operands).
+@dataclasses.dataclass(frozen=True)
+class _Compressed:
+    """Trace-time partition of a structured sparse side.
 
-    m is sharded over the first mesh axis and n over the second; the
-    structural motion axis for the lhs is therefore the second axis (its
-    reuse spans the n-direction) and vice versa — the same orientation the
-    hand-written SUMMA/Cannon engines used.  Grid-folded batch dims are
-    replicated (leading ``None`` spec); every body contraction is
-    rank-aware via ``_contract``.
+    The dense prepared operand is decomposed into its pattern's blocks and
+    each device's nonzero blocks are collected as (payload, stat-coord,
+    k-coord) triples — the stationary-dim coordinate is local to the
+    device's shard, the contraction-dim coordinate is in ``k_frame``
+    ("global": the frame of a full-k dense side at contract time, i.e.
+    gathered/resident; "local": the frame of a k-spatial shard).  Payload
+    rows are padded per device to the max nnz (``n_max``); padded entries
+    are zeroed so they contribute nothing downstream.
     """
-    ax_x, ax_y = mesh.axis_names
-    sx, sy = mesh.devices.shape
-    square = sx == sy
-    lb = bool(form.batch) and form.lhs_batched
-    rb = bool(form.batch) and form.rhs_batched
-    ob = bool(form.batch)
 
-    if lhs_kind == "ppermute_ring" and rhs_kind == "ppermute_ring" \
-            and not square:
-        # Cannon needs equal ring lengths; on a rectangular mesh realize
-        # the same reuse with the multicast wires instead.
-        lhs_kind = rhs_kind = "all_gather"
+    side: str                       # lhs | rhs
+    block: Tuple[int, int]
+    d0_pad: int                     # padded operand dims
+    d1_pad: int
+    n_max: int
+    flat_ids: np.ndarray            # (s0, s1, n_max) block ids, padded w/ 0
+    stat_c: np.ndarray              # (s0, s1, n_max) local stationary coords
+    k_c: np.ndarray                 # (s0, s1, n_max) contraction coords
+    valid: np.ndarray               # (s0, s1, n_max) bool
+    counts: np.ndarray              # (s0, s1) nnz per device
 
-    lhs_moves = lhs_kind in ("all_gather", "ppermute_ring")
-    rhs_moves = rhs_kind in ("all_gather", "ppermute_ring")
-    ring_axes = tuple(ax for ax, kind in ((ax_y, lhs_kind), (ax_x, rhs_kind))
-                      if kind == "ppermute_ring")
+    @property
+    def grid_pad(self) -> Tuple[int, int]:
+        return (self.d0_pad // self.block[0], self.d1_pad // self.block[1])
 
-    # k-split granularity: the ring length when a ring exists (Cannon needs
-    # both splits equal), else each moving side splits over its own axis.
-    double_ring = lhs_kind == "ppermute_ring" and rhs_kind == "ppermute_ring"
-    S = sy if lhs_kind == "ppermute_ring" else \
-        (sx if rhs_kind == "ppermute_ring" else 1)
 
-    in_specs = (_spec(lb, ax_x, ax_y if lhs_moves else None),
-                _spec(rb, ax_x if rhs_moves else None, ax_y))
-    out_spec = _spec(ob, ax_x, ax_y)
-    kmult = math.lcm(sy if lhs_moves else 1, sx if rhs_moves else 1, max(S, 1))
+def _splits(ax, sizes: Dict[str, int]) -> int:
+    return plan_mod._axis_factor(ax, sizes)
 
-    strategy = ("cannon" if double_ring else
-                "summa" if lhs_kind == "all_gather"
-                and rhs_kind == "all_gather" else
-                "ring_hybrid" if ring_axes else
-                "multicast_hybrid" if lhs_moves or rhs_moves else "local")
+
+def _compress_partition(form: "LoweredForm", sol: PartitionSolution,
+                        k_frame: str, k_extra: int = 1) -> _Compressed:
+    """Partition the pattern's block-COO list per device (numpy, static).
+
+    ``k_extra`` is the dense side's contraction-dim split factor: the
+    padded k extent must be divisible by it too, so the gathered /
+    resident dense side and the payload's k-coordinate frame agree."""
+    osp = form.sparse
+    tp = sol.lhs if osp.side == "lhs" else sol.rhs
+    axes, (s0, s1) = sol.axes, sol.shape
+    sizes = sol.sizes
+    b0, b1 = osp.block
+    if osp.side == "lhs":
+        stat_dim, k_dim = "m", "k"
+        d0_ext, d1_ext = form.m, form.k
+        stat_pos = 0                       # rows are the stationary dim
+    else:
+        stat_dim, k_dim = "n", "k"
+        d0_ext, d1_ext = form.k, form.n
+        stat_pos = 1                       # cols are the stationary dim
+    stat_ax = tp.axis_of.get(stat_dim)
+    k_ax = tp.axis_of.get(k_dim)
+    f_stat = _splits(stat_ax, sizes)
+    f_k = _splits(k_ax, sizes)
+
+    # pad operand dims so every shard is a whole number of blocks (and the
+    # contraction dim also divides the dense side's split)
+    def padded(ext, blk, splits, extra=1):
+        step = math.lcm(blk * splits, extra)
+        return step * math.ceil(ext / step)
+
+    if stat_pos == 0:
+        d0_pad = padded(d0_ext, b0, f_stat)
+        d1_pad = padded(d1_ext, b1, f_k, k_extra)
+        g_stat, g_k = d0_pad // b0, d1_pad // b1
+    else:
+        d0_pad = padded(d0_ext, b0, f_k, k_extra)
+        d1_pad = padded(d1_ext, b1, f_stat)
+        g_k, g_stat = d0_pad // b0, d1_pad // b1
+    g0, g1 = d0_pad // b0, d1_pad // b1
+    stat_per, k_per = g_stat // f_stat, g_k // f_k
+
+    def shard_of(ax, i, j):
+        if ax is None:
+            return 0
+        if isinstance(ax, tuple):
+            coords = {axes[0]: i, axes[1]: j}
+            idx = 0
+            for a in ax:
+                idx = idx * sizes[a] + coords[a]
+            return idx
+        return i if ax == axes[0] else j
+
+    per_dev = [[[] for _ in range(s1)] for _ in range(s0)]
+    for (r, c) in osp.coords:
+        stat_id, k_id = (r, c) if stat_pos == 0 else (c, r)
+        si, ki = stat_id // stat_per, k_id // k_per
+        for i in range(s0):
+            for j in range(s1):
+                if shard_of(stat_ax, i, j) != si and stat_ax is not None:
+                    continue
+                if shard_of(k_ax, i, j) != ki and k_ax is not None:
+                    continue
+                stat_local = stat_id - (si if stat_ax is not None else 0) \
+                    * stat_per
+                k_out = k_id if k_frame == "global" else \
+                    k_id - (ki if k_ax is not None else 0) * k_per
+                per_dev[i][j].append((r * g1 + c, stat_local, k_out))
+
+    counts = np.array([[len(per_dev[i][j]) for j in range(s1)]
+                       for i in range(s0)], np.int32)
+    n_max = max(1, int(counts.max()))
+    flat_ids = np.zeros((s0, s1, n_max), np.int32)
+    stat_c = np.zeros((s0, s1, n_max), np.int32)
+    k_c = np.zeros((s0, s1, n_max), np.int32)
+    valid = np.zeros((s0, s1, n_max), bool)
+    for i in range(s0):
+        for j in range(s1):
+            for t, (fid, sc, kc) in enumerate(per_dev[i][j]):
+                flat_ids[i, j, t] = fid
+                stat_c[i, j, t] = sc
+                k_c[i, j, t] = kc
+                valid[i, j, t] = True
+    return _Compressed(osp.side, (b0, b1), d0_pad, d1_pad, n_max,
+                       flat_ids, stat_c, k_c, valid, counts)
+
+
+def _pack_payload(dense2d: jax.Array, comp: _Compressed) -> jax.Array:
+    """Blocks of the padded dense operand, gathered per device and zeroed
+    on padded entries: (s0, s1, n_max, b0, b1)."""
+    b0, b1 = comp.block
+    g0, g1 = comp.grid_pad
+    x = _pad_dim(_pad_dim(dense2d, -2, comp.d0_pad), -1, comp.d1_pad)
+    x = x[:comp.d0_pad, :comp.d1_pad]
+    blocks = x.reshape(g0, b0, g1, b1).transpose(0, 2, 1, 3)
+    flat = blocks.reshape(g0 * g1, b0, b1)
+    pay = flat[comp.flat_ids]                     # (s0, s1, N, b0, b1)
+    mask = jnp.asarray(comp.valid)[..., None, None]
+    return jnp.where(mask, pay, jnp.zeros((), pay.dtype))
+
+
+def _bsr_contract(pay: jax.Array, stat_c: jax.Array, k_c: jax.Array,
+                  dense: jax.Array, side: str, stat_blocks: int,
+                  b_stat: int, b_k: int) -> jax.Array:
+    """One compressed contraction: nonzero blocks against a dense side.
+
+    ``side == 'lhs'``: pay (N, bm, bk) x dense (K, n) -> (stat_blocks*bm, n)
+    ``side == 'rhs'``: dense (m, K) x pay (N, bk, bn) -> (m, stat_blocks*bn)
+
+    ``dense``'s contraction extent K must be in the same frame as ``k_c``
+    (full-k at contract time for gathered/resident sides, the local shard
+    for k-spatial).  Padded payload entries are zero, so their (0, 0)
+    coordinates contribute nothing.
+    """
+    if side == "lhs":
+        n = dense.shape[-1]
+        rb = dense.reshape(-1, b_k, n)[k_c]               # (N, bk, n)
+        parts = jnp.einsum("nab,nbc->nac", pay, rb,
+                           preferred_element_type=jnp.float32)
+        out = jax.ops.segment_sum(parts, stat_c, num_segments=stat_blocks)
+        return out.reshape(stat_blocks * b_stat, n)
+    m = dense.shape[-2]
+    lb = jnp.take(dense.reshape(m, -1, b_k), k_c, axis=1)  # (m, N, bk)
+    parts = jnp.einsum("mnb,nbc->nmc", lb, pay,
+                       preferred_element_type=jnp.float32)
+    out = jax.ops.segment_sum(parts, stat_c, num_segments=stat_blocks)
+    return out.transpose(1, 0, 2).reshape(m, stat_blocks * b_stat)
+
+
+# ---------------------------------------------------------------------------
+# Strategy family 1: output blocks stationary (shard / stream output)
+# ---------------------------------------------------------------------------
+
+def _build_out_stationary(sol: PartitionSolution, form, mesh: Mesh,
+                          dtype) -> MeshProgram:
+    """Output (b?, m, n) blocks resident on their chip; the contraction is
+    delivered by the motions the solver assigned: gathers (multicast
+    wires), rings (systolic wires), or local full-k residency."""
+    ax0, ax1 = sol.axes
+    sizes = sol.sizes
+    s0, s1 = sol.shape
+    lhs_tp, rhs_tp, out_tp = sol.lhs, sol.rhs, sol.out
+    double_ring = sol.strategy == "cannon"
+    lhs_ring = lhs_tp.motion == "ppermute_ring"
+    rhs_ring = rhs_tp.motion == "ppermute_ring"
+    S = s1 if lhs_ring else (s0 if rhs_ring else 1)
+
+    comp = None
+    if lhs_tp.compressed or rhs_tp.compressed:
+        dn_tp = rhs_tp if lhs_tp.compressed else lhs_tp
+        comp = _compress_partition(
+            form, sol, k_frame="global",
+            k_extra=plan_mod._axis_factor(dn_tp.axis_of.get("k"), sizes))
+
+    in_specs = (_spec_of(lhs_tp), _spec_of(rhs_tp))
+    out_spec = _spec_of(out_tp)
+    kmult = math.lcm(
+        s1 if lhs_tp.axis_of.get("k") else 1,
+        s0 if rhs_tp.axis_of.get("k") else 1, max(S, 1))
+    f_b = plan_mod._axis_factor(sol.batch_axis, sizes)
+    f_m = plan_mod._axis_factor(sol.grid.get("m"), sizes)
+    f_n = plan_mod._axis_factor(sol.grid.get("n"), sizes)
+
+    if comp is None:
+        fn = _dense_out_stationary_fn(
+            sol, form, mesh, dtype, in_specs, out_spec, kmult,
+            f_b, f_m, f_n, S, double_ring)
+    else:
+        fn = _compressed_out_stationary_fn(
+            sol, form, mesh, dtype, comp, out_spec, kmult, f_m, f_n, S)
+    return MeshProgram(sol.strategy, in_specs, out_spec, sol.ring_axes,
+                       (f_m, f_n, kmult), sol, fn)
+
+
+def _dense_out_stationary_fn(sol, form, mesh, dtype, in_specs, out_spec,
+                             kmult, f_b, f_m, f_n, S, double_ring):
+    ax0, ax1 = sol.axes
+    s0, s1 = sol.shape
+    lhs_tp, rhs_tp = sol.lhs, sol.rhs
+    lhs_ring = lhs_tp.motion == "ppermute_ring"
+    rhs_ring = rhs_tp.motion == "ppermute_ring"
+    lhs_gather = lhs_tp.motion == "all_gather"
+    rhs_gather = rhs_tp.motion == "all_gather"
 
     def body(l, r):
-        if lhs_kind == "all_gather":
-            l = jax.lax.all_gather(l, ax_y, axis=l.ndim - 1, tiled=True)
-        if rhs_kind == "all_gather":
-            r = jax.lax.all_gather(r, ax_x, axis=r.ndim - 2, tiled=True)
-        if not ring_axes:
+        if lhs_gather:
+            l = jax.lax.all_gather(l, ax1, axis=l.ndim - 1, tiled=True)
+        if rhs_gather:
+            r = jax.lax.all_gather(r, ax0, axis=r.ndim - 2, tiled=True)
+        if not (lhs_ring or rhs_ring):
             return _contract(l, r).astype(dtype)
 
         if double_ring:
-            left = _ring_perm(sy)
-            up = _ring_perm(sx)
+            left = _ring_perm(s1)
+            up = _ring_perm(s0)
 
             def step(t, carry):
                 l_c, r_c, acc = carry
                 acc = acc + _contract(l_c, r_c)
-                l_c = jax.lax.ppermute(l_c, ax_y, left)
-                r_c = jax.lax.ppermute(r_c, ax_x, up)
+                l_c = jax.lax.ppermute(l_c, ax1, left)
+                r_c = jax.lax.ppermute(r_c, ax0, up)
                 return l_c, r_c, acc
 
             _, _, acc = jax.lax.fori_loop(0, S, step, (l, r, _acc_init(l, r)))
@@ -268,17 +418,16 @@ def _out_stationary(form, mesh: Mesh, lhs_kind: str, rhs_kind: str,
         # single ring: one side circulates its k-blocks; the other side
         # holds full k (gathered or resident) and slices the block that is
         # currently aligned with the ring position.
-        ring_on_lhs = lhs_kind == "ppermute_ring"
-        ax_ring = ax_y if ring_on_lhs else ax_x
+        ax_ring = ax1 if lhs_ring else ax0
         perm = _ring_perm(S)
         pos = jax.lax.axis_index(ax_ring)
-        mov0 = l if ring_on_lhs else r
-        kb = mov0.shape[-1] if ring_on_lhs else mov0.shape[-2]
+        mov0 = l if lhs_ring else r
+        kb = mov0.shape[-1] if lhs_ring else mov0.shape[-2]
 
         def step(t, carry):
             mov, acc = carry
             idx = ((pos + t) % S) * kb
-            if ring_on_lhs:
+            if lhs_ring:
                 r_blk = jax.lax.dynamic_slice_in_dim(r, idx, kb,
                                                      axis=r.ndim - 2)
                 acc = acc + _contract(mov, r_blk)
@@ -292,94 +441,254 @@ def _out_stationary(form, mesh: Mesh, lhs_kind: str, rhs_kind: str,
         _, acc = jax.lax.fori_loop(0, S, step, (mov0, _acc_init(l, r)))
         return acc.astype(dtype)
 
+    batched = bool(form.batch)
+
     def run(lhs, rhs):
-        m, n = lhs.shape[-2], rhs.shape[-1]
-        lhs = _pad_dim(_pad_dim(lhs, -2, sx), -1, kmult)
-        rhs = _pad_dim(_pad_dim(rhs, -1, sy), -2, kmult)
+        b, m, n = form.batch_size, lhs.shape[-2], rhs.shape[-1]
+        lhs = _pad_dim(_pad_dim(lhs, -2, f_m), -1, kmult)
+        rhs = _pad_dim(_pad_dim(rhs, -1, f_n), -2, kmult)
+        if batched:
+            if form.lhs_batched:
+                lhs = _pad_dim(lhs, -3, f_b)
+            if form.rhs_batched:
+                rhs = _pad_dim(rhs, -3, f_b)
         if double_ring:
-            lhs = _skew(lhs, sx, roll_axis=-1, block_axis=-2)
-            rhs = _skew(rhs, sy, roll_axis=-2, block_axis=-1)
+            lhs = _skew(lhs, s0, roll_axis=-1, block_axis=-2)
+            rhs = _skew(rhs, s1, roll_axis=-2, block_axis=-1)
         out = jax_compat.shard_map(
             body, mesh=mesh, in_specs=in_specs, out_specs=out_spec,
             check_vma=False)(lhs, rhs)
+        out = out[..., :m, :n]
+        return out[:b] if batched else out
+
+    return jax.jit(run)
+
+
+def _compressed_out_stationary_fn(sol, form, mesh, dtype, comp, out_spec,
+                                  kmult, f_m, f_n, S):
+    """The sparse side ships as (payload, stat-coords, k-coords) through
+    the motion the solver assigned (gather or single ring — the solver
+    never emits a compressed double ring); the dense side moves exactly as
+    in the dense program and is full-k at contract time, so the global
+    k-coordinates the payload carries need no realignment."""
+    ax0, ax1 = sol.axes
+    s0, s1 = sol.shape
+    sp_side = comp.side
+    sp_tp = sol.lhs if sp_side == "lhs" else sol.rhs
+    dn_tp = sol.rhs if sp_side == "lhs" else sol.lhs
+    dn_gather = dn_tp.motion == "all_gather"
+    sp_gather = sp_tp.motion == "all_gather"
+    sp_ring = sp_tp.motion == "ppermute_ring"
+    b0, b1 = comp.block
+    b_stat, b_k = (b0, b1) if sp_side == "lhs" else (b1, b0)
+    stat_ax = sp_tp.axis_of.get("m" if sp_side == "lhs" else "n")
+    f_stat = plan_mod._axis_factor(stat_ax, sol.sizes)
+    stat_blocks = (comp.d0_pad if sp_side == "lhs" else comp.d1_pad) \
+        // (b_stat * f_stat)
+    # the sparse side's motion axis (k split) and the dense side's
+    dn_ax = ax0 if sp_side == "lhs" else ax1
+    sp_ax = ax1 if sp_side == "lhs" else ax0
+    triple_specs = (P(ax0, ax1, None, None, None),
+                    P(ax0, ax1, None), P(ax0, ax1, None))
+
+    def body(pay, sc, kc, dense):
+        pay, sc, kc = pay[0, 0], sc[0, 0], kc[0, 0]
+        if dn_gather:
+            axis = dense.ndim - 2 if sp_side == "lhs" else dense.ndim - 1
+            dense = jax.lax.all_gather(dense, dn_ax, axis=axis, tiled=True)
+        if sp_gather:
+            pay = jax.lax.all_gather(pay, sp_ax, axis=0, tiled=True)
+            sc = jax.lax.all_gather(sc, sp_ax, axis=0, tiled=True)
+            kc = jax.lax.all_gather(kc, sp_ax, axis=0, tiled=True)
+        if not sp_ring:
+            return _bsr_contract(pay, sc, kc, dense, sp_side,
+                                 stat_blocks, b_stat, b_k).astype(dtype)
+
+        perm = _ring_perm(S)
+        if sp_side == "lhs":
+            acc0 = jnp.zeros((stat_blocks * b_stat, dense.shape[-1]),
+                             jnp.float32)
+        else:
+            acc0 = jnp.zeros((dense.shape[-2], stat_blocks * b_stat),
+                             jnp.float32)
+
+        def step(t, carry):
+            pay_c, sc_c, kc_c, acc = carry
+            acc = acc + _bsr_contract(pay_c, sc_c, kc_c, dense, sp_side,
+                                      stat_blocks, b_stat, b_k)
+            pay_c = jax.lax.ppermute(pay_c, sp_ax, perm)
+            sc_c = jax.lax.ppermute(sc_c, sp_ax, perm)
+            kc_c = jax.lax.ppermute(kc_c, sp_ax, perm)
+            return pay_c, sc_c, kc_c, acc
+
+        _, _, _, acc = jax.lax.fori_loop(0, S, step, (pay, sc, kc, acc0))
+        return acc.astype(dtype)
+
+    dense_spec = _spec_of(dn_tp)
+    sc = jnp.asarray(comp.stat_c)
+    kc = jnp.asarray(comp.k_c)
+
+    def run(lhs, rhs):
+        m, n = lhs.shape[-2], rhs.shape[-1]
+        sp2d, dn2d = (lhs, rhs) if sp_side == "lhs" else (rhs, lhs)
+        pay = _pack_payload(sp2d, comp)
+        if sp_side == "lhs":
+            dn2d = _pad_dim(_pad_dim(dn2d, -1, f_n), -2, comp.d1_pad)
+            dn2d = dn2d[:comp.d1_pad]
+            args = (pay, sc, kc, dn2d)
+        else:
+            dn2d = _pad_dim(_pad_dim(dn2d, -2, f_m), -1, comp.d0_pad)
+            dn2d = dn2d[:, :comp.d0_pad]
+            args = (pay, sc, kc, dn2d)
+        out = jax_compat.shard_map(
+            body, mesh=mesh, in_specs=(*triple_specs, dense_spec),
+            out_specs=out_spec, check_vma=False)(*args)
         return out[..., :m, :n]
 
-    return MeshProgram(strategy, in_specs, out_spec, ring_axes,
-                       (sx, sy, kmult), jax.jit(run))
+    return jax.jit(run)
 
 
 # ---------------------------------------------------------------------------
-# Strategy 2: contraction spatial over mesh axes (psum / output-ring /
-# broadcast-reduction outputs)
+# Strategy family 2: contraction spatial over mesh axes (psum / staggered
+# output ring / broadcast-reduction outputs)
 # ---------------------------------------------------------------------------
 
-def _k_spatial(form, mesh: Mesh, lhs_kind: str, rhs_kind: str,
-               k_axes: Tuple[str, ...], dtype, *, ring: bool) -> MeshProgram:
-    """The contraction dimension is sharded over ``k_axes``; each chip
-    computes a partial product and the reduction tree runs over those axes
-    — as one ``psum`` (reduction-class outputs) or as an accumulate-rotate
-    ppermute ring (systolic-class outputs).
-
-    Inputs never need off-chip k-blocks here (k is spatial), so input
-    rings/multicasts along non-k axes collapse to replication — the
-    time-staggering they describe is a wire-level schedule, not a
-    different data placement.  Grid-folded batch dims are replicated
-    (leading ``None`` spec), the partial products are batched.
-    """
-    ax_x, ax_y = mesh.axis_names
-    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
-    other = next((a for a in mesh.axis_names if a not in k_axes), None)
-    lb = bool(form.batch) and form.lhs_batched
-    rb = bool(form.batch) and form.rhs_batched
-    ob = bool(form.batch)
-
-    # the fully-partitioned ("shard"/"stream") input also splits its non-k
-    # dim over the remaining axis; lhs wins if both claim it
-    shard_m = other is not None and lhs_kind in ("shard", "stream")
-    shard_n = other is not None and not shard_m
-
-    k_spec = k_axes[0] if len(k_axes) == 1 else tuple(k_axes)
-    in_specs = (_spec(lb, other if shard_m else None, k_spec),
-                _spec(rb, k_spec, other if shard_n else None))
-    out_spec = _spec(ob, other if shard_m else None,
-                     other if shard_n else None)
+def _build_k_spatial(sol: PartitionSolution, form, mesh: Mesh,
+                     dtype) -> MeshProgram:
+    """The contraction dim is sharded over ``sol.k_axes``; each chip
+    computes a partial product and the reduction runs over those axes —
+    one ``psum`` (reduction-class outputs) or the staggered
+    accumulate-rotate ppermute schedule (systolic-class outputs, the
+    executed dt: the output is the mobile tensor and stores 1/S per
+    device)."""
+    sizes = sol.sizes
+    k_axes = sol.k_axes
+    lhs_tp, rhs_tp, out_tp = sol.lhs, sol.rhs, sol.out
     kmult = math.prod(sizes[a] for a in k_axes)
-    ring_axes = k_axes if ring else ()
-    S = sizes[k_axes[0]] if ring else 0
+    f_b = plan_mod._axis_factor(sol.batch_axis, sizes)
+    f_m = plan_mod._axis_factor(sol.grid.get("m"), sizes)
+    f_n = plan_mod._axis_factor(sol.grid.get("n"), sizes)
+    S = sizes[k_axes[0]] if sol.stagger else 0
+
+    comp = None
+    if lhs_tp.compressed or rhs_tp.compressed:
+        comp = _compress_partition(form, sol, k_frame="local",
+                                   k_extra=kmult)
+
+    in_specs = (_spec_of(lhs_tp), _spec_of(rhs_tp))
+    out_spec = _spec_of(out_tp)
+    ring_ax = k_axes[0] if sol.stagger else None
+
+    def reduce_partial(part):
+        """Partial (b?, m_pad, n_loc) fp32 -> reduced output block: one
+        psum over the k axes, or — for systolic-class outputs — the
+        staggered accumulate-rotate schedule (the executed dt): at step t
+        device r adds its k-shard's partial for output chunk
+        ``(r - t) mod S`` to the chunk passing by and forwards it, so
+        after S rotations chunk r has visited every k-shard and lands on
+        device r — the mobile tensor stores 1/S per device instead of a
+        full replica."""
+        if not sol.stagger:
+            return jax.lax.psum(part, k_axes if len(k_axes) > 1
+                                else k_axes[0])
+        pos = jax.lax.axis_index(ring_ax)
+        chunk = part.shape[-2] // S
+        perm = _fwd_perm(S)
+
+        def step(t, acc):
+            c = (pos - t) % S
+            pc = jax.lax.dynamic_slice_in_dim(part, c * chunk, chunk,
+                                              axis=part.ndim - 2)
+            return jax.lax.ppermute(acc + pc, ring_ax, perm)
+
+        acc0 = jnp.zeros((*part.shape[:-2], chunk, part.shape[-1]),
+                         jnp.float32)
+        return jax.lax.fori_loop(0, S, step, acc0)
+
+    m_mult = S if sol.stagger else f_m
+    if comp is not None:
+        fn = _compressed_k_spatial_fn(sol, form, mesh, dtype, comp,
+                                      out_spec, f_m, f_n, m_mult,
+                                      reduce_partial)
+    else:
+        fn = _dense_k_spatial_fn(sol, form, mesh, dtype, in_specs,
+                                 out_spec, kmult, f_b, f_n, m_mult,
+                                 reduce_partial)
+    return MeshProgram(sol.strategy, in_specs, out_spec,
+                       sol.ring_axes, (f_m, f_n, kmult), sol, fn)
+
+
+def _dense_k_spatial_fn(sol, form, mesh, dtype, in_specs, out_spec, kmult,
+                        f_b, f_n, m_mult, reduce_partial):
+    batched = bool(form.batch)
 
     def body(l, r):
-        part = _contract(l, r)
-        if ring:
-            perm = _ring_perm(S)
-
-            def step(t, acc):
-                return jax.lax.ppermute(acc, k_axes[0], perm) + part
-
-            # S steps of (rotate, add own partial) leave the full sum on
-            # every ring member — the systolic output chain, chip-scale
-            total = jax.lax.fori_loop(0, S, step,
-                                      jnp.zeros_like(part))
-        else:
-            total = jax.lax.psum(part, k_axes if len(k_axes) > 1
-                                 else k_axes[0])
-        return total.astype(dtype)
+        return reduce_partial(_contract(l, r)).astype(dtype)
 
     def run(lhs, rhs):
-        m, n = lhs.shape[-2], rhs.shape[-1]
-        lhs = _pad_dim(lhs, -1, kmult)
-        rhs = _pad_dim(rhs, -2, kmult)
-        if shard_m:
-            lhs = _pad_dim(lhs, -2, sizes[other])
-        if shard_n:
-            rhs = _pad_dim(rhs, -1, sizes[other])
+        b, m, n = form.batch_size, lhs.shape[-2], rhs.shape[-1]
+        lhs = _pad_dim(_pad_dim(lhs, -1, kmult), -2, m_mult)
+        rhs = _pad_dim(_pad_dim(rhs, -2, kmult), -1, f_n)
+        if batched:
+            if form.lhs_batched:
+                lhs = _pad_dim(lhs, -3, f_b)
+            if form.rhs_batched:
+                rhs = _pad_dim(rhs, -3, f_b)
         out = jax_compat.shard_map(
             body, mesh=mesh, in_specs=in_specs, out_specs=out_spec,
             check_vma=False)(lhs, rhs)
+        out = out[..., :m, :n]
+        return out[:b] if batched else out
+
+    return jax.jit(run)
+
+
+def _compressed_k_spatial_fn(sol, form, mesh, dtype, comp, out_spec,
+                             f_m, f_n, m_mult, reduce_partial):
+    """Compressed operand under a k-spatial plan: every device holds only
+    the nonzero blocks of its own (stat-shard, k-shard) tile — local-frame
+    k coordinates against the dense side's k-shard — and the reduction
+    (psum tree or staggered output ring) runs on the partial products."""
+    sp_side = comp.side
+    sp_tp = sol.lhs if sp_side == "lhs" else sol.rhs
+    b0, b1 = comp.block
+    b_stat, b_k = (b0, b1) if sp_side == "lhs" else (b1, b0)
+    stat_ax = sp_tp.axis_of.get("m" if sp_side == "lhs" else "n")
+    f_stat = plan_mod._axis_factor(stat_ax, sol.sizes)
+    stat_blocks = (comp.d0_pad if sp_side == "lhs" else comp.d1_pad) \
+        // (b_stat * f_stat)
+    dn_tp = sol.rhs if sp_side == "lhs" else sol.lhs
+    dense_spec = _spec_of(dn_tp)
+    triple_specs = (P(*sol.axes, None, None, None),
+                    P(*sol.axes, None), P(*sol.axes, None))
+    sc = jnp.asarray(comp.stat_c)
+    kc = jnp.asarray(comp.k_c)
+
+    def body(pay, sc_b, kc_b, dense):
+        pay, sc_b, kc_b = pay[0, 0], sc_b[0, 0], kc_b[0, 0]
+        part = _bsr_contract(pay, sc_b, kc_b, dense, sp_side,
+                             stat_blocks, b_stat, b_k)
+        if sol.stagger and part.shape[-2] % m_mult:
+            part = _pad_dim(part, -2, m_mult)
+        return reduce_partial(part).astype(dtype)
+
+    def run(lhs, rhs):
+        m, n = lhs.shape[-2], rhs.shape[-1]
+        sp2d, dn2d = (lhs, rhs) if sp_side == "lhs" else (rhs, lhs)
+        pay = _pack_payload(sp2d, comp)
+        if sp_side == "lhs":
+            dn2d = _pad_dim(_pad_dim(dn2d, -1, f_n), -2, comp.d1_pad)
+            dn2d = dn2d[:comp.d1_pad]
+        else:
+            dn2d = _pad_dim(_pad_dim(dn2d, -2, max(f_m, m_mult)),
+                            -1, comp.d0_pad)
+            dn2d = dn2d[:, :comp.d0_pad]
+        out = jax_compat.shard_map(
+            body, mesh=mesh, in_specs=(*triple_specs, dense_spec),
+            out_specs=out_spec, check_vma=False)(pay, sc, kc, dn2d)
         return out[..., :m, :n]
 
-    return MeshProgram("k_spatial_ring" if ring else "k_spatial",
-                       in_specs, out_spec, ring_axes,
-                       (1, 1, kmult), jax.jit(run))
+    return jax.jit(run)
 
 
 # ---------------------------------------------------------------------------
@@ -394,6 +703,7 @@ def describe(comm: CommPlan, form: "LoweredForm", mesh: Mesh
              "lhs_spec": str(prog.in_specs[0]),
              "rhs_spec": str(prog.in_specs[1]),
              "out_spec": str(prog.out_spec)}
+    lines.update(prog.solution.describe())
     for t in comm.tensors:
         ax = ",".join(t.mesh_axes) if t.mesh_axes else "-"
         lines[t.tensor] = f"{t.kind}[{ax}]"

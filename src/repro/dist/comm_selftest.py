@@ -58,8 +58,19 @@ def check_all_algebras() -> None:
         np.testing.assert_array_equal(single, want)
         np.testing.assert_array_equal(multi, want)
         kinds = {t.tensor: t.kind for t in acc.plan.comm.tensors}
-        prog = sharded._program()
-        print(f"{name:15s} comm={kinds} strategy={prog.strategy}: "
+        sol = sharded.partition
+        # no silent replication: the solver must shard every input side,
+        # and fold batch grid dims onto a mesh axis instead of
+        # replicating them
+        assert not sol.replicated_inputs(), (
+            f"{name}: inputs {sol.replicated_inputs()} fell back to "
+            f"replication (partition {sol.describe()})")
+        if acc.kernel.form.batch:
+            assert sol.batch_axis is not None, (
+                f"{name}: batch dim replicated (partition "
+                f"{sol.describe()})")
+        print(f"{name:15s} comm={kinds} strategy={sol.strategy} "
+              f"batch_axis={sol.batch_axis}: "
               f"sharded == single == reference")
 
 

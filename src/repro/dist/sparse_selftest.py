@@ -6,10 +6,12 @@
 On 8 fake CPU devices: a block-sparse GEMM accelerator bound to a 2x2
 mesh must match both the masked dense oracle (``alg.reference`` on
 masked operands) and the single-chip BSR kernel, across several
-densities.  The mesh path runs the CommPlan-prescribed collectives on
-the *masked dense* operand form (`Accelerator.sharded`'s documented
-dense-replication fallback), so parity here proves the fallback is
-exact, not merely approximate.
+densities.  Since the unified-partition refactor the mesh path ships the
+operand **compressed** (per-device BSR payload + block-COO coordinates
+through the CommPlan collectives — the solver reports ``compressed``);
+the masked-dense baseline (``sparse='dense'``) is exercised alongside to
+prove both paths are exact and that the compressed footprint is the
+smaller one.
 """
 import os
 
@@ -30,17 +32,27 @@ def check_sparse_mesh_parity() -> None:
         sp = Sparsity.random((16, 16), (4, 4), density, seed=7)
         acc = repro.generate(alg.with_sparsity(A=sp), interpret=True)
         assert acc.kernel.sparse_mode == "bsr", acc.kernel.sparse_mode
-        sharded = acc.sharded(mesh)
+        sharded = acc.sharded(mesh)                   # compressed (default)
+        baseline = acc.sharded(mesh, sparse="dense")  # masked-dense
+        sol = sharded.partition
+        assert sol.lhs.compressed, sol.describe()
         operands = acc.algebra.random_sparse_inputs(seed=11)
         want = acc.algebra.reference(operands)
         single = np.asarray(acc(operands)).round().astype(np.int64)
-        multi = np.asarray(sharded(operands)).round().astype(np.int64)
         np.testing.assert_array_equal(single, want)
-        np.testing.assert_array_equal(multi, want)
+        for a in (sharded, baseline):
+            multi = np.asarray(a(operands)).round().astype(np.int64)
+            np.testing.assert_array_equal(multi, want)
+        form = acc.kernel.form
+        comp_b = sol.per_device_bytes(form)["lhs"]
+        dense_b = baseline.partition.per_device_bytes(form)["lhs"]
+        if density < 1.0:
+            assert comp_b < dense_b, (comp_b, dense_b)
         comm = acc.plan.comm.by_tensor()["A"]
         assert abs(comm.density - density) < 1e-9, comm
         print(f"sparse-mesh-parity density={density:.2f} "
-              f"comm={comm.kind} OK")
+              f"comm={comm.kind} compressed={comp_b:.0f}B/dev "
+              f"dense={dense_b:.0f}B/dev OK")
 
 
 def main() -> None:

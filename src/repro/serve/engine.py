@@ -103,7 +103,7 @@ class AcceleratorEngine:
         #: carries the compiled MeshProgram (shard_map trace) — reusing
         #: the handle is what makes repeat shapes free multi-chip too.
         self._accs: Dict = {}
-        self._stats = {"requests": 0, "algebras": set()}
+        self._stats = {"requests": 0, "algebras": set(), "partitions": {}}
 
     def _accelerator(self, algebra: str, dataflow, bounds):
         # algebra (str or frozen TensorAlgebra) and dataflow (None, str or
@@ -128,11 +128,26 @@ class AcceleratorEngine:
         with self._lock:
             self._stats["requests"] += 1
             self._stats["algebras"].add(acc.algebra.name)
+            if acc.mesh is not None:
+                # the solved partition this request executed (the CI /
+                # ops-facing proof no algebra silently replicates)
+                sol = acc.partition
+                self._stats["partitions"][acc.algebra.name] = {
+                    "strategy": sol.strategy,
+                    "batch_axis": sol.batch_axis,
+                    "replicated_inputs": sol.replicated_inputs()}
         return out
+
+    def describe(self, algebra: str, *, dataflow=None,
+                 bounds: Optional[Dict[str, int]] = None) -> str:
+        """The served accelerator's ``describe()`` — per-tensor partition
+        and comm bytes included when the engine is mesh-bound."""
+        return self._accelerator(algebra, dataflow, bounds).describe()
 
     def stats(self) -> Dict:
         from ..compile import cache_info
         with self._lock:
             return {"requests": self._stats["requests"],
                     "algebras": sorted(self._stats["algebras"]),
+                    "partitions": dict(self._stats["partitions"]),
                     "compile_cache": cache_info()}

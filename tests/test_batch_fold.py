@@ -126,16 +126,35 @@ def test_lowered_form_executed_macs_matches_algebra():
 
 
 def test_masked_dense_sparse_reports_honest_ratio():
-    """A sparse pattern with no structured 2-D image runs masked-dense:
-    executed MACs stay dense while the model prices the compressed
-    dataflow — the ratio must report that gap, not hide it."""
+    """A sparse pattern with no structured 2-D image runs masked-dense
+    *within the kept batch slices*: in-slice zero blocks still execute,
+    and the ratio must report that gap, not hide it.  (All-zero slices
+    themselves are skipped since the per-slice mapping — ISSUE 5.)"""
+    dw = algebra.depthwise_conv(**DW_BOUNDS)
+    # every channel keeps only the q=0 column of its window: no slice is
+    # all-zero (nothing to skip), but 2/3 of each slice's MACs are masked
+    sp = Sparsity((4, 3, 1), ((0, 0, 0), (1, 0, 0)))
+    dws = dw.with_sparsity(B=sp)
+    form = rcompile.lower_form(dws)
+    assert form.sparse is None and form.masked_sparse == ("B",)
+    assert form.batch_keep is None
+    rep = PaperCycleModel().evaluate(dws, rcompile.default_dataflow(dws))
+    assert rep.executed_mac_ratio > 1.0
+
+
+def test_batched_sparse_slice_skip_closes_ratio():
+    """A pattern whose zero blocks cover whole batch slices is captured
+    completely by the per-slice mapping: the kernel skips those slices
+    and the ratio returns to 1.0 (previously batch/kept x too high)."""
     dw = algebra.depthwise_conv(**DW_BOUNDS)
     sp = Sparsity.random((8, 3, 3), (4, 3, 3), density=0.5, seed=0)
     dws = dw.with_sparsity(B=sp)
     form = rcompile.lower_form(dws)
-    assert form.sparse is None and form.masked_sparse == ("B",)
+    assert form.batch_keep is not None and form.batch == (4,)
     rep = PaperCycleModel().evaluate(dws, rcompile.default_dataflow(dws))
-    assert rep.executed_mac_ratio > 1.0
+    assert rep.executed_mac_ratio == pytest.approx(1.0)
+    kern = rcompile.lower(dws, interpret=True)
+    assert kern.validated
 
 
 # ---------------------------------------------------------------------------

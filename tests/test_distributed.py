@@ -47,6 +47,26 @@ def test_comm_engine_selftest():
                  "depthwise_conv"):
         # the exact per-algebra parity row, not just the name anywhere
         assert f"{name:15s} comm=" in out, f"missing parity row for {name}"
+    # the no-silent-replication assert ran: batched algebras report the
+    # mesh axis their batch dim folds onto
+    assert "batched_gemv" in out and "batch_axis=x" in out
     assert "summa-as-oracle" in out
     assert "cannon-as-oracle" in out
     assert "ring-reduce-as-oracle" in out
+
+
+def test_partition_selftest():
+    """The unified partition solver (ISSUE 5): degenerate + skewed
+    meshes through every CommPlan kind, batch-sharded and bsr-sharded
+    parity, dt-staggered schedules, and the ~1/P footprint shrink — all
+    asserted on 8 fake devices from the solver's reported partition."""
+    out = run_selftest("repro.dist.partition_selftest", timeout=1200)
+    assert "ALL PARTITION SELFTESTS PASSED" in out
+    for name in ("gemm", "conv2d", "mttkrp", "ttmc", "batched_gemv",
+                 "depthwise_conv"):
+        assert f"degenerate-mesh {name:15s}" in out, name
+    assert "batch-shard batched_gemv" in out
+    assert "batch-shard depthwise_conv" in out
+    assert "compressed (2, 2) density=0.25" in out
+    assert "stagger (2, 4)" in out
+    assert "batched-sparse batched_gemv" in out

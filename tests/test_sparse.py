@@ -351,10 +351,24 @@ def test_generate_sparse_search_ranks_and_validates():
     assert acc.kernel.validated and acc.candidates
 
 
-def test_sharded_bsr_request_raises_clearly():
+def test_sharded_sparse_modes():
+    """Compressed shipping is the default for structured operands now:
+    ``sparse='bsr'`` is accepted (no more NotImplementedError), and the
+    masked-dense baseline stays requestable; unknown modes still raise."""
     alg, _ = sparse_gemm(0.5)
     acc = repro.generate(alg, interpret=True)
-    with pytest.raises(NotImplementedError, match="dense"):
-        acc.sharded(None, sparse="bsr")
+    assert acc.sharded(None, sparse="bsr").sparse_mode_mesh == "bsr"
+    assert acc.sharded(None).sparse_mode_mesh == "auto"
+    assert acc.sharded(None, sparse="dense").sparse_mode_mesh == "dense"
     with pytest.raises(ValueError, match="sparse"):
         acc.sharded(None, sparse="bogus")
+    # an explicit bsr request on a form with no structured operand must
+    # fail loudly, not silently ship masked-dense
+    from repro.core.algebra import depthwise_conv
+    dws = depthwise_conv(k=8, y=5, x=5, p=2, q=2).with_sparsity(
+        B=Sparsity.random((8, 2, 2), (4, 2, 2), 0.5, seed=0))
+    masked = repro.generate(dws, interpret=True)
+    assert masked.kernel.sparse_mode == "masked"
+    with pytest.raises(ValueError, match="structured"):
+        masked.sharded(None, sparse="bsr")
+    assert masked.sharded(None).sparse_mode_mesh == "auto"
