@@ -26,7 +26,6 @@ CI benchmark step runs it on every push).
 from __future__ import annotations
 
 import argparse
-import time
 
 import numpy as np
 import jax
@@ -35,6 +34,7 @@ import jax.numpy as jnp
 import repro
 from repro.core import algebra
 from repro.kernels import ref
+from repro.tune.measure import measure
 
 BATCHES = (4, 16, 64, 128)
 SMOKE_BATCHES = (4, 16)
@@ -45,13 +45,9 @@ DW = dict(y=14, x=14, p=3, q=3)
 
 
 def _time(fn, *args, repeats: int = 5) -> float:
-    fn(*args).block_until_ready()          # compile outside the clock
-    best = float("inf")
-    for _ in range(repeats):
-        t0 = time.perf_counter()
-        fn(*args).block_until_ready()
-        best = min(best, time.perf_counter() - t0)
-    return best * 1e3
+    """Best-of-``repeats`` in ms, via the shared measurement harness
+    (repro.tune.measure) — the one timing loop the whole repo uses."""
+    return measure(fn, *args, warmup=1, repeats=repeats).best_s * 1e3
 
 
 def gemv_rows(batches, repeats: int) -> list:

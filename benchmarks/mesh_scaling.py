@@ -141,13 +141,17 @@ def assert_baselines(label, alg, dfname, form):
 
 def smoke_parity(label, alg, dfname):
     """Execute every swept mesh shape on fake devices: parity against
-    the loop-nest oracle, compressed/batch-sharded paths included."""
+    the loop-nest oracle, compressed/batch-sharded paths included; wall
+    time per shape via the shared harness (``repro.tune.measure``)."""
     import jax
     from jax.sharding import Mesh
+
+    from repro.tune.measure import measure
 
     operands = alg.random_operands(seed=3)
     want = alg.reference(operands)
     acc = repro.generate(alg, dfname, interpret=True, validate=False)
+    times = []
     for shape in MESH_SHAPES:
         n_dev = shape[0] * shape[1]
         if n_dev > len(jax.devices()):
@@ -157,7 +161,10 @@ def smoke_parity(label, alg, dfname):
         sh = acc.sharded(mesh)
         got = np.asarray(sh(operands)).round().astype(np.int64)
         np.testing.assert_array_equal(got, want, err_msg=f"{label} {shape}")
-    print(f"  {label}: parity on {len(MESH_SHAPES)} mesh shapes")
+        ms = measure(sh, operands, warmup=1, repeats=3).median_s * 1e3
+        times.append(f"{shape}={ms:.1f}ms")
+    print(f"  {label}: parity on {len(MESH_SHAPES)} mesh shapes "
+          f"({' '.join(times)})")
 
 
 def main() -> None:

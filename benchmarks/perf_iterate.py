@@ -17,6 +17,16 @@ and kernel wall time, and appends the record the same way:
 
     PYTHONPATH=src python -m benchmarks.perf_iterate \
         --stt gemm --dataflow output_stationary
+
+Tune cells (ISSUE 6: measured autotuning): ``--tune`` runs the
+timing-driven tuner over registry cells — all six algebras, or the
+two-cell ``--smoke`` subset CI runs — and writes the machine-readable
+``BENCH_tune.json`` at the repo root (modeled vs measured cycles, tuned
+vs untuned wall clock, the fitted calibration).  Exits nonzero when any
+tuned pick is slower than its untuned baseline or the emitted document
+fails the schema validator:
+
+    PYTHONPATH=src python -m benchmarks.perf_iterate --tune [--smoke]
 """
 import os
 os.environ.setdefault("XLA_FLAGS",
@@ -92,15 +102,13 @@ def run_stt_cell(name: str, kind: str, interpret: bool = True) -> dict:
     repro.generate(alg, kind, interpret=interpret, validate=False)
     t_cached = time.perf_counter() - t0
 
+    # kernel wall time through the shared measurement harness (the same
+    # warmup + median-of-k loop the autotuner persists numbers from)
+    from repro.tune.measure import measure
     operands = alg.random_operands(0)
-    t0 = time.perf_counter()
-    out = acc(operands)
-    out.block_until_ready()
-    t_first = time.perf_counter() - t0
-    t0 = time.perf_counter()
-    out = acc(operands)
-    out.block_until_ready()
-    t_steady = time.perf_counter() - t0
+    meas = measure(acc, operands, warmup=1, repeats=3)
+    t_first = meas.warmup_s
+    t_steady = meas.median_s
 
     r = acc.cost_report()
     return {
@@ -112,6 +120,101 @@ def run_stt_cell(name: str, kind: str, interpret: bool = True) -> dict:
         "cache": rcompile.cache_info(),
         "model_cycles": r.cycles, "model_perf": r.normalized_perf,
     }
+
+
+#: the two-cell CI smoke subset: the canonical dense algebra plus the
+#: batch-folded one the tuner's headline speedup is measured on
+SMOKE_TUNE_CELLS = ("gemm", "batched_gemv")
+#: measured speedup the tuned batched_gemv pick must reach over the
+#: untuned analytical pick (ISSUE 6 acceptance)
+GEMV_MIN_SPEEDUP = 1.5
+
+
+def run_tune_cells(smoke: bool, out_path: str = "BENCH_tune.json") -> dict:
+    """Tune registry cells, emit BENCH_tune.json, return the document.
+
+    Raises SystemExit (nonzero) when a tuned pick is slower than its
+    untuned baseline, the batched_gemv speedup misses the floor (smoke),
+    or the document fails its own schema validator.
+    """
+    import jax.numpy as jnp  # noqa: F401  (forces the backend up early)
+
+    from repro import tune as rtune
+    from repro.core.algebra import PAPER_ALGEBRAS, get_algebra
+    from repro.core.tiling import ArrayConfig
+    from repro.tune import report as rreport
+
+    names = SMOKE_TUNE_CELLS if smoke else tuple(sorted(PAPER_ALGEBRAS))
+    cfg = ArrayConfig()
+    cells = []
+    for name in names:
+        alg = get_algebra(name)
+        res = rtune.tune(alg, search=2, cfg=cfg, interpret=True)
+        kernel = res.kernel
+        rep = kernel.cost_report()
+        cal = rtune.load_calibration()
+        scale = cal.scale_for(kernel.template, alg.name)
+        cells.append(rreport.cell_entry(
+            cell=f"tune_{name}", algebra=name,
+            dataflow=res.dataflow.name, template=kernel.template,
+            variant={"blocks": res.variant.blocks,
+                     "grid_order": res.variant.grid_order,
+                     "accum": res.variant.accum},
+            model_cycles=rep.cycles,
+            calibrated_cycles=rep.cycles * scale,
+            measured_cycles=(res.tuned_s or 0.0) * cfg.freq_mhz * 1e6,
+            untuned_s=res.untuned_s or 0.0, tuned_s=res.tuned_s or 0.0,
+            tune_cache_hit=res.cache_hit))
+        c = cells[-1]
+        print(f"tune/{name}: {c['dataflow']} {c['variant']['blocks']} "
+              f"go={c['variant']['grid_order']} accum={c['variant']['accum']}"
+              f" untuned={c['untuned_s'] * 1e3:.3f}ms "
+              f"tuned={c['tuned_s'] * 1e3:.3f}ms "
+              f"speedup={c['speedup']:.2f}x"
+              + (" (cache hit)" if c["tune_cache_hit"] else ""))
+        print(f"  cycles: model={c['model_cycles']:.0f} "
+              f"calibrated={c['calibrated_cycles']:.0f} "
+              f"measured={c['measured_cycles']:.0f}")
+
+    cal = rtune.load_calibration()
+    doc = {
+        "version": rreport.BENCH_SCHEMA_VERSION,
+        "smoke": bool(smoke),
+        "interpret": True,
+        "cells": cells,
+        "calibration": {
+            "per_template": dict(cal.per_template),
+            "anchors": [{"template": t, "algebra": a, "scale": s}
+                        for (t, a), s in sorted(cal.anchors.items())],
+        },
+    }
+
+    errors = rreport.validate_bench(doc)
+    if errors:
+        raise SystemExit("BENCH_tune.json failed schema validation:\n  "
+                         + "\n  ".join(errors))
+    slow = [c["cell"] for c in cells if c["speedup"] < 1.0]
+    if slow:
+        raise SystemExit(f"tuned pick slower than untuned for: {slow}")
+    for c in cells:
+        if c["algebra"] == "batched_gemv" \
+                and c["speedup"] < GEMV_MIN_SPEEDUP:
+            raise SystemExit(
+                f"tuned batched_gemv speedup {c['speedup']:.2f}x below "
+                f"the {GEMV_MIN_SPEEDUP}x floor")
+        if c["measured_cycles"] > 0 and not (
+                0.5 <= c["calibrated_cycles"] / c["measured_cycles"] <= 2.0):
+            raise SystemExit(
+                f"{c['cell']}: calibrated prediction "
+                f"{c['calibrated_cycles']:.0f} not within 2x of measured "
+                f"{c['measured_cycles']:.0f}")
+
+    with open(out_path, "w") as f:
+        json.dump(doc, f, indent=1, sort_keys=True)
+        f.write("\n")
+    print(f"\nwrote -> {out_path} ({len(cells)} cells, all tuned picks "
+          f">= untuned)")
+    return doc
 
 
 def main() -> None:
@@ -126,7 +229,16 @@ def main() -> None:
                          "instead of an (arch x shape) model cell")
     ap.add_argument("--dataflow", default="output_stationary",
                     help="named STT for --stt cells")
+    ap.add_argument("--tune", action="store_true",
+                    help="run measured-autotuning cells and emit "
+                         "BENCH_tune.json at the repo root")
+    ap.add_argument("--smoke", action="store_true",
+                    help="with --tune: the two-cell CI subset")
     args = ap.parse_args()
+
+    if args.tune:
+        run_tune_cells(args.smoke)
+        return
 
     if args.stt:
         from repro.core.algebra import PAPER_ALGEBRAS

@@ -8,6 +8,8 @@ Sections:
   sparse — block-sparse GEMM: BSR kernel parity + compressed-format costs
   batch_fold — grid-folded vs block-diagonal batch execution (MAC ratio +
          wall time; oracle parity)
+  tune   — measured autotuning smoke: tuned vs untuned wall clock per cell,
+         calibrated cycle model, BENCH_tune.json emission
   table3 — MM throughput comparison (XLA baselines + TPU roofline projection)
   roofline — aggregated dry-run roofline table (if results/dryrun exists)
 """
@@ -60,6 +62,14 @@ def main() -> None:
         batch_fold.main()
     except Exception:
         failures.append("batch_fold")
+        traceback.print_exc()
+
+    _section("Measured autotuning — tuned vs untuned + calibration")
+    try:
+        from benchmarks import perf_iterate
+        perf_iterate.run_tune_cells(smoke=True)
+    except Exception:
+        failures.append("tune")
         traceback.print_exc()
 
     _section("Table III — matmul throughput comparison")

@@ -7,7 +7,9 @@ density,
     compressed-format terms the DSE ranks with),
   * the BSR grid size (nonzero blocks only) vs the dense grid,
   * end-to-end parity of the BSR Pallas kernel against the masked dense
-    oracle (interpret mode, shrunk bounds — exact on integer operands).
+    oracle (interpret mode, shrunk bounds — exact on integer operands),
+    plus its measured wall time through the shared harness
+    (``repro.tune.measure``: warmup + median-of-k).
 
 Asserts the acceptance properties: model cycles and total traffic are
 monotonically non-increasing as density decreases, and the executed
@@ -29,6 +31,7 @@ import repro
 from repro.core import stt
 from repro.core.algebra import Sparsity, gemm
 from repro.core.costmodel import PaperCycleModel
+from repro.tune.measure import measure
 
 #: validated execution bounds (loop-nest oracle + interpret-mode Pallas)
 EXEC_SIZE, EXEC_BLOCK = 16, 4
@@ -80,6 +83,8 @@ def execute_rows(densities, size=EXEC_SIZE, block=EXEC_BLOCK):
             "grid_blocks": sp.nnz_blocks,
             "dense_grid": (size // block) ** 2,
             "max_err": err,
+            "exec_ms": measure(acc, operands, warmup=1,
+                               repeats=3).median_s * 1e3,
             "bit_exact_vs_dense": (
                 bool((np.asarray(acc(operands)) == dense_out).all())
                 if density == 1.0 else None),
@@ -111,13 +116,15 @@ def main() -> None:
 
     print(f"\nexecution (gemm {EXEC_SIZE}^3, {EXEC_BLOCK}x{EXEC_BLOCK} "
           f"blocks, interpret mode, masked dense oracle):")
-    print("density,mode,grid_blocks,dense_grid,max_err,bit_exact_vs_dense")
+    print("density,mode,grid_blocks,dense_grid,max_err,exec_ms,"
+          "bit_exact_vs_dense")
     for r in execute_rows(densities):
         assert r["max_err"] <= 1e-3, r
         assert r["bit_exact_vs_dense"] in (None, True), r
         be = "-" if r["bit_exact_vs_dense"] is None else "yes"
         print(f"{r['density']},{r['mode']},{r['grid_blocks']},"
-              f"{r['dense_grid']},{r['max_err']:.1e},{be}")
+              f"{r['dense_grid']},{r['max_err']:.1e},"
+              f"{r['exec_ms']:.3f},{be}")
     print("\nsparse_gemm: all parity and monotonicity checks passed")
 
 

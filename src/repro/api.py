@@ -85,6 +85,10 @@ class Accelerator:
     #: (False = replicating baseline, for footprint A/B comparisons)
     sparse_mode_mesh: str = "auto"
     shard_batch: bool = True
+    #: the measured autotuner's result when built via ``generate(tune=...)``
+    #: (:class:`repro.tune.TuneResult`): winning variant, measured medians,
+    #: whether the on-disk tuning cache answered
+    tune_result: Optional[object] = None
     _mesh_prog: Optional[object] = dataclasses.field(
         default=None, repr=False, compare=False)
 
@@ -132,6 +136,25 @@ class Accelerator:
                  + f"resident={self.plan.kernel.resident_tensor}",
                  f"  macs:   executed={rep.executed_macs} "
                  f"ratio={rep.executed_mac_ratio:.2f} (executed/priced)"]
+        if self.kernel.source == "tuned" or self.tune_result is not None:
+            tr = self.tune_result
+            bits = [f"source={self.kernel.source}",
+                    f"grid_order={self.kernel.grid_order}",
+                    f"accum={self.kernel.accum}"]
+            if self.kernel.measured_s is not None:
+                bits.append(f"measured={self.kernel.measured_s * 1e3:.3f}ms")
+            if tr is not None:
+                if tr.speedup is not None:
+                    bits.append(f"speedup={tr.speedup:.2f}x")
+                bits.append("cache-hit" if tr.cache_hit
+                            else f"trials={len(tr.trials)}")
+            lines.append("  tuned:  " + " ".join(bits))
+        if rep.measured_cycles is not None or rep.calibrated:
+            cyc = (f"  cycles: model={rep.cycles:.0f}"
+                   + (" (calibrated)" if rep.calibrated else ""))
+            if rep.measured_cycles is not None:
+                cyc += f" measured={rep.measured_cycles:.0f}"
+            lines.append(cyc)
         if self.algebra.is_sparse:
             dens = " ".join(f"{name}:{self.algebra.density_of(name):.3f}"
                             for name, _ in self.algebra.sparsity)
@@ -242,6 +265,7 @@ def generate(alg: Union[TensorAlgebra, str],
              dataflow: DataflowLike = None, *,
              search: Union[int, Sequence[Tuple[CostReport, Dataflow]],
                            None] = None,
+             tune: Union[bool, int, None] = None,
              mesh: Optional["jax.sharding.Mesh"] = None,
              bounds: Optional[Dict[str, int]] = None,
              sparsity: Optional[Dict[str, Sparsity]] = None,
@@ -261,6 +285,14 @@ def generate(alg: Union[TensorAlgebra, str],
       search: ``top_k`` (int) to run ``dse.search`` here, or a ranked
         ``[(report, dataflow), ...]`` from a previous search.  Candidates
         are lowered best-first; the first that validates wins.
+      tune: measured autotuning (``repro.tune``): True runs the timing-
+        driven tuner over the analytical top candidates (an int sets the
+        candidate width), picks the dataflow + kernel variant with the
+        best *measured* median, and persists the winner in the on-disk
+        tuning cache — so a second ``generate(tune=...)`` call on the
+        same shape is a pure cache hit with no re-measurement.  The
+        result is exposed as ``Accelerator.tune_result`` and in
+        ``describe()``.  Mutually exclusive with ``dataflow``/``search``.
       mesh: bind the result to a 2-D device mesh — ``__call__`` then runs
         the generated CommPlan through ``dist/comm_engine.py``.
       bounds: loop-bound overrides forwarded to the algebra.
@@ -282,6 +314,18 @@ def generate(alg: Union[TensorAlgebra, str],
         interpret = jax.default_backend() != "tpu"
 
     candidates: Optional[Tuple[Tuple[CostReport, Dataflow], ...]] = None
+    if tune:
+        if dataflow is not None or search is not None:
+            raise ValueError("tune= is mutually exclusive with dataflow= "
+                             "and search=")
+        from . import tune as _tune_mod
+        width = tune if isinstance(tune, int) \
+            and not isinstance(tune, bool) else 4
+        result = _tune_mod.tune(algebra, search=width, cfg=cfg, dtype=dtype,
+                                interpret=interpret, backend=backend,
+                                validate=validate)
+        acc = Accelerator(result.kernel, tune_result=result)
+        return acc.sharded(mesh) if mesh is not None else acc
     if search is not None:
         if dataflow is not None:
             raise ValueError("pass either dataflow= or search=, not both")

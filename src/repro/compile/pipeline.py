@@ -67,6 +67,17 @@ class CompiledKernel:
     dtype: jnp.dtype
     interpret: bool
     backend: str
+    #: measured-autotuning knobs (kernels/stt_gemm.py): contraction grid
+    #: order and accumulation strategy; "default"/"auto" = the analytical
+    #: pipeline's historic behavior
+    grid_order: str = "default"
+    accum: str = "auto"
+    #: where the blocks/knobs came from: "analytical" (shared tile
+    #: chooser) or "tuned" (measured-autotuning cache, repro.tune)
+    source: str = "analytical"
+    #: median measured wall-clock seconds for this kernel, when the tuner
+    #: has timed it (drives CostReport.measured_cycles)
+    measured_s: Optional[float] = None
     validated: bool = False
     _report: Optional[CostReport] = dataclasses.field(
         default=None, repr=False)
@@ -141,7 +152,8 @@ class CompiledKernel:
                 lhs, rhs, template=self.template, stationary=self.stationary,
                 bm=bm, bn=bn, bk=bk, backend=self.backend,
                 interpret=self.interpret,
-                vmem_budget=self.cfg.vmem_budget_bytes)
+                vmem_budget=self.cfg.vmem_budget_bytes,
+                grid_order=self.grid_order, accum=self.accum)
         return self.form.finish(out2d)
 
     def validate(self, seed: int = 0, atol: float = 1e-3) -> float:
@@ -163,10 +175,20 @@ class CompiledKernel:
 
     def cost_report(self) -> CostReport:
         """The cost model's view of this exact (algebra, dataflow, config)
-        — same tile chooser, so priced and executed tiles agree."""
+        — same tile chooser, so priced and executed tiles agree.  When the
+        measured autotuner has timed this kernel (``measured_s``), the
+        report carries the measurement as ``measured_cycles`` at the
+        model's clock, so modeled and measured sit side by side."""
         if self._report is None:
             self._report = PaperCycleModel(self.cfg).evaluate(
                 self.algebra, self.dataflow)
+        if self.measured_s is not None:
+            mc = self.measured_s * self.cfg.freq_mhz * 1e6
+            if self._report.measured_cycles != mc:
+                # re-attach on every change: the compile cache shares this
+                # object, and a re-tune may update measured_s in place
+                self._report = dataclasses.replace(
+                    self._report, measured_cycles=mc)
         return self._report
 
 
@@ -194,8 +216,19 @@ def _cache_key(alg: TensorAlgebra, df: Dataflow, cfg: ArrayConfig,
     # LoweredForm — batch grid dims included — is a pure function of it,
     # so the key needs no separate form component.  The dataflow key adds
     # the selection, the exact T and the per-tensor classification.
+    #
+    # This tuple is also the identity the on-disk *tuning* cache hashes
+    # (repro.tune.cache.key_for): a tuned variant applies exactly where
+    # the compiled kernel it was measured on would be reused.
     return (alg, df.selected, df.T, df.signature, cfg,
             jnp.dtype(dtype).name, interpret, backend)
+
+
+def _variant_key(key: Tuple, blocks, grid_order: str, accum: str) -> Tuple:
+    """Extend the base key with the knob values a kernel was built with
+    (``blocks=None`` = the analytical tile chooser's blocks, which are a
+    pure function of the base key)."""
+    return key + (blocks, grid_order, accum)
 
 
 def cache_info() -> Dict[str, int]:
@@ -245,12 +278,23 @@ def lower(alg: TensorAlgebra, df: Optional[Dataflow] = None, *,
           cfg: ArrayConfig = ArrayConfig(),
           dtype=jnp.float32, interpret: bool = False,
           backend: str = "pallas",
-          validate: Optional[bool] = None) -> CompiledKernel:
+          validate: Optional[bool] = None,
+          blocks: Optional[Tuple[int, int, int]] = None,
+          grid_order: Optional[str] = None,
+          accum: Optional[str] = None,
+          tuned: Optional[bool] = None) -> CompiledKernel:
     """Lower ``(algebra, dataflow)`` to an executable, cached kernel.
 
     ``validate=None`` (default) auto-validates against ``alg.reference``
     when the problem is small enough for the python oracle; pass True to
     force (may be slow) or False to skip.
+
+    ``blocks`` / ``grid_order`` / ``accum`` override the analytical tile
+    chooser and the kernel-knob defaults (the measured autotuner's search
+    axes).  When none are given and ``tuned`` is not False, the on-disk
+    tuning cache (``repro.tune``) is consulted first — a persisted winner
+    for this exact compile key replaces the analytical choice, which is
+    how a ``repro.tune.tune()`` run keeps paying off in later processes.
     """
     if df is None:
         df = default_dataflow(alg)
@@ -258,6 +302,21 @@ def lower(alg: TensorAlgebra, df: Optional[Dataflow] = None, *,
         raise ValueError(f"dataflow {df.name} was generated for algebra "
                          f"{df.algebra_name!r}, not {alg.name!r}")
     key = _cache_key(alg, df, cfg, dtype, interpret, backend)
+    source, measured_s = "analytical", None
+    if blocks is None and grid_order is None and accum is None \
+            and tuned is not False:
+        # consult the measured-tuning cache before the analytical chooser
+        from ..tune import cache as tune_cache
+        entry = tune_cache.lookup_variant(tune_cache.key_of(key))
+        if entry is not None:
+            blocks = tuple(entry["blocks"])
+            grid_order = entry["grid_order"]
+            accum = entry["accum"]
+            source = "tuned"
+            measured_s = entry.get("measured_s")
+    grid_order = "default" if grid_order is None else grid_order
+    accum = "auto" if accum is None else accum
+    key = _variant_key(key, blocks, grid_order, accum)
     with _CACHE_LOCK:
         hit = _CACHE.get(key)
         if hit is not None:
@@ -278,13 +337,16 @@ def lower(alg: TensorAlgebra, df: Optional[Dataflow] = None, *,
     ep = plan_mod.plan_for(
         df, densities={name: alg.density_of(name) for name, _ in alg.sparsity})
     form = lower_form(alg)
-    blocks = _blocks_from_tile(alg, df, form, cfg)
+    if blocks is None:
+        blocks = _blocks_from_tile(alg, df, form, cfg)
     stationary = "A" if ep.kernel.resident_tensor in form.lhs_tensors \
         else "B"
     kernel = CompiledKernel(
         algebra=alg, dataflow=df, plan=ep, form=form, blocks=blocks,
         stationary=stationary, cfg=cfg, dtype=jnp.dtype(dtype),
-        interpret=interpret, backend=backend)
+        interpret=interpret, backend=backend,
+        grid_order=grid_order, accum=accum, source=source,
+        measured_s=measured_s)
     if validate or (validate is None
                     and alg.total_macs() <= VALIDATE_MACS_LIMIT):
         kernel.validate()

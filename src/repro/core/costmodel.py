@@ -70,6 +70,15 @@ class CostReport:
     mesh_comm_bytes: Dict[str, float] = dataclasses.field(
         default_factory=dict)
     mesh_cycles: float = 0.0
+    #: median measured wall clock expressed at the model's frequency, when
+    #: the measured autotuner (repro.tune) has timed this design; None =
+    #: never measured.  Sits beside ``cycles`` so modeled vs measured is
+    #: one report, not two code paths.
+    measured_cycles: Optional[float] = None
+    #: True when ``cycles`` (and everything derived from it: peak,
+    #: normalized_perf, runtime_ms) was scaled by a fitted
+    #: measured/model calibration (repro.tune.calibrate)
+    calibrated: bool = False
 
     @property
     def executed_mac_ratio(self) -> float:
@@ -121,17 +130,42 @@ class PaperCycleModel:
     INDEX_BYTES = 4
 
     def __init__(self, cfg: ArrayConfig = ArrayConfig(),
-                 density: Optional[float] = None):
+                 density: Optional[float] = None,
+                 calibration=None):
         """``density`` is a uniform input-operand density override used to
         rank dataflows for a target sparsity level *without* committing to
         a concrete pattern (``dse.search(..., density=...)``).  Tensors
         carrying an explicit :class:`~repro.core.algebra.Sparsity` always
-        use their own block density instead."""
+        use their own block density instead.
+
+        ``calibration`` is a fitted measured/model scale table (duck-typed
+        on ``scale_for(template, algebra) -> float``; canonically a
+        :class:`repro.tune.calibrate.Calibration`).  When given, every
+        predicted cycle count is multiplied by the scale for the design's
+        kernel template — the first-principles model times a machine
+        correction — and reports carry ``calibrated=True``.  Scales are
+        clamped positive by the fit, so calibrated cycles are positive
+        whenever analytical cycles are, and same-template rankings are
+        preserved."""
         if density is not None and not 0.0 < density <= 1.0:
             raise ValueError(f"density override must be in (0, 1], "
                              f"got {density}")
+        if calibration is not None and not callable(
+                getattr(calibration, "scale_for", None)):
+            raise TypeError("calibration must expose "
+                            "scale_for(template, algebra)")
         self.cfg = cfg
         self.density = density
+        self.calibration = calibration
+
+    def _calibration_scale(self, alg: TensorAlgebra, df: Dataflow) -> float:
+        if self.calibration is None:
+            return 1.0
+        # the template is the plan layer's total function of the
+        # classification — lazy import, same reverse edge as _lowered_form
+        from . import plan as plan_mod
+        template = plan_mod.kernel_plan_for(df).template
+        return float(self.calibration.scale_for(template, alg.name))
 
     def _density_of(self, alg: TensorAlgebra, name: str,
                     is_output: bool) -> float:
@@ -250,9 +284,13 @@ class PaperCycleModel:
         stall = max(1.0, demand / self.cfg.bytes_per_cycle)
 
         cycles = n_stages * tile_cycles * stall
+        # calibration applies before peak/normalized are derived, so every
+        # downstream quantity tracks the corrected cycle count
+        cycles *= self._calibration_scale(alg, df)
         macs = max(1, round(alg.total_macs() * work))
         peak = int(cycles * self.cfg.n_pes)
         report = CostReport(
+            calibrated=self.calibration is not None,
             executed_macs=self._executed_macs(alg, macs),
             dataflow_name=df.name,
             cycles=cycles,

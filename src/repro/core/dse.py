@@ -216,6 +216,7 @@ def sweep_with_dataflows(alg: TensorAlgebra,
                          selections: Optional[Sequence[Tuple[str, ...]]]
                          = None,
                          density: Optional[float] = None,
+                         calibration=None,
                          ) -> List[Tuple[CostReport, Dataflow]]:
     """Full DSE sweep, keeping the (report, dataflow) association.
 
@@ -223,8 +224,10 @@ def sweep_with_dataflows(alg: TensorAlgebra,
     T's share a letter combo), so consumers that need to act on a costed
     point — e.g. lower the pareto winner — must use this pairing rather
     than a name lookup.  ``density`` is the uniform input-density override
-    (tensors with an explicit Sparsity pattern keep their own)."""
-    model = PaperCycleModel(cfg, density=density)
+    (tensors with an explicit Sparsity pattern keep their own).
+    ``calibration`` scales every prediction by the fitted measured/model
+    ratio for its template (see ``PaperCycleModel``)."""
+    model = PaperCycleModel(cfg, density=density, calibration=calibration)
     return [(model.evaluate(alg, df), df)
             for df in enumerate_dataflows(alg, selections).values()]
 
@@ -233,9 +236,11 @@ def sweep(alg: TensorAlgebra,
           cfg: ArrayConfig = ArrayConfig(),
           selections: Optional[Sequence[Tuple[str, ...]]] = None,
           density: Optional[float] = None,
+          calibration=None,
           ) -> List[CostReport]:
     """Full DSE sweep: enumerate + cost every distinct dataflow."""
-    return [r for r, _ in sweep_with_dataflows(alg, cfg, selections, density)]
+    return [r for r, _ in sweep_with_dataflows(alg, cfg, selections, density,
+                                               calibration)]
 
 
 def _mesh_shape(mesh) -> Tuple[int, int]:
@@ -253,6 +258,7 @@ def search(alg: TensorAlgebra, top_k: int = 5,
            objective=None,
            density: Optional[float] = None,
            mesh=None,
+           calibration=None,
            ) -> List[Tuple[CostReport, Dataflow]]:
     """Ranked design-space search: the DSE as an API the front door eats.
 
@@ -274,8 +280,13 @@ def search(alg: TensorAlgebra, top_k: int = 5,
     the solved partition's spatial split plus collective stall terms —
     and ranked by ``mesh_cycles``: a dataflow that replicates less and
     ships smaller payloads wins even when its single-chip cycles tie.
+
+    Calibrated ranking: ``calibration`` (a fitted measured/model scale
+    table, ``repro.tune.calibrate``) re-prices every candidate with its
+    template's machine-measured correction before ranking — the measured
+    autotuner's feedback path into the analytical search.
     """
-    pairs = sweep_with_dataflows(alg, cfg, selections, density)
+    pairs = sweep_with_dataflows(alg, cfg, selections, density, calibration)
     if mesh is not None:
         from .costmodel import mesh_evaluate
         shape = _mesh_shape(mesh)

@@ -32,14 +32,40 @@ def _pad_to(x: jax.Array, mults: tuple) -> jax.Array:
 # GEMM
 # ---------------------------------------------------------------------------
 
+def resolve_accum(accum: str, out_dtype) -> str:
+    """The accumulation-strategy policy (the bf16 knob the tuner selects
+    over): ``"auto"`` picks the numerically safe default — fp32 scratch
+    accumulation — for *every* dtype, because bf16 inputs lose reduction
+    precision when partial sums round to bf16 each k-step.  The tuner may
+    explicitly select ``"inplace"`` (direct accumulation in the output
+    dtype — for bf16, the bf16-direct strategy) when the variant still
+    validates within tolerance; callers can force either mode."""
+    if accum == "auto":
+        return "scratch"
+    if accum not in _gemm.ACCUM_MODES:
+        raise ValueError(f"accum must be 'auto' or one of "
+                         f"{_gemm.ACCUM_MODES}, got {accum!r}")
+    return accum
+
+
+def _rt_order(grid_order: str) -> str:
+    """Project a 3-axis grid order onto the reduction-tree's (m, n) grid
+    (its whole reduction runs inside one MXU pass, so 'k' drops out)."""
+    if grid_order == "default":
+        return "mn"
+    order = "".join(c for c in grid_order if c in "mn")
+    return order if order in _gemm.RT_GRID_ORDERS else "mn"
+
+
 @functools.partial(jax.jit, static_argnames=(
     "template", "stationary", "bm", "bn", "bk", "backend", "interpret",
-    "vmem_budget"))
+    "vmem_budget", "grid_order", "accum"))
 def stt_matmul(a: jax.Array, b: jax.Array, *, template: str = "output_stationary",
                stationary: str = "B", bm: int = 128, bn: int = 128,
                bk: int = 128, backend: str = "pallas",
                interpret: bool = False,
-               vmem_budget: Optional[int] = _gemm.DEFAULT_VMEM_BUDGET
+               vmem_budget: Optional[int] = _gemm.DEFAULT_VMEM_BUDGET,
+               grid_order: str = "default", accum: str = "auto"
                ) -> jax.Array:
     """C = A @ B with the Pallas template selected by an STT dataflow.
 
@@ -54,6 +80,13 @@ def stt_matmul(a: jax.Array, b: jax.Array, *, template: str = "output_stationary
     strip would not fit, the call falls back to the output-stationary
     template (same math, block-local residency) instead of erroring — the
     compile pipeline relies on this safety net.
+
+    ``grid_order`` and ``accum`` are the measured-autotuning knobs (see
+    ``kernels/stt_gemm.py``): contraction grid order for the output-
+    stationary / reduction-tree templates, and the accumulation strategy
+    (``resolve_accum``).  The operand-stationary template has its own
+    fixed streaming order, so the knobs apply to it only after the VMEM
+    fallback reroutes to the output-stationary template.
     """
     if backend == "xla":
         return _ref.matmul_ref(a, b)
@@ -73,13 +106,17 @@ def stt_matmul(a: jax.Array, b: jax.Array, *, template: str = "output_stationary
             template = "output_stationary"
     kw = dict(bm=bm, bn=bn, bk=bk, interpret=interpret)
     if template == "output_stationary":
-        out = _gemm.matmul_output_stationary(ap, bp, **kw)
+        out = _gemm.matmul_output_stationary(
+            ap, bp, grid_order=grid_order,
+            accum=resolve_accum(accum, a.dtype), **kw)
     elif template == "operand_stationary":
         out = _gemm.matmul_operand_stationary(ap, bp, stationary=stationary,
                                               vmem_budget=vmem_budget, **kw)
     elif template in ("reduction_tree", "streaming"):
         kw.pop("bk")
-        out = _gemm.matmul_reduction_tree(ap, bp, **kw)
+        out = _gemm.matmul_reduction_tree(ap, bp,
+                                          grid_order=_rt_order(grid_order),
+                                          **kw)
     else:
         raise ValueError(f"unknown template {template!r}")
     return out[..., :m, :n]

@@ -96,46 +96,107 @@ def operand_stationary_strip_bytes(m: int, bn: int) -> int:
 
 
 # ---------------------------------------------------------------------------
-# output-stationary (SST-class): C resident, A/B streamed, k innermost
+# output-stationary (SST-class): C resident, A/B streamed
 # ---------------------------------------------------------------------------
+# Two tunable knobs (measured autotuning searches over both):
+#
+# * ``grid_order`` — the contraction grid order.  "mnk" (default) and
+#   "nmk" keep the reduction innermost so the scratch accumulator stays
+#   live across k-steps and Mosaic double-buffers the streamed A/B blocks
+#   (the double-buffered operand-streaming variants differ in which
+#   operand's blocks get the streaming reuse).  "kmn"/"knm" hoist the
+#   reduction outermost — the output block is revisited and accumulated
+#   in place instead, which trades accumulator residency for streaming
+#   the full C through VMEM once per k-step.
+#
+# * ``accum`` — "scratch" accumulates in an fp32 VMEM scratch buffer and
+#   casts once at the final k-step (exact for bf16 inputs); "inplace"
+#   accumulates directly in the output block *in the output dtype* — the
+#   bf16-direct accumulation strategy (cheaper residency, lossier sums).
+#   k-outer grid orders require "inplace" (one scratch block cannot
+#   survive a full sweep of the other axes between k-steps).
 
-def _os_kernel(a_ref, b_ref, o_ref, acc_ref, *, n_k: int, out_dtype):
-    @pl.when(pl.program_id(3) == 0)
+#: valid output-stationary grid orders (batch axis is always outermost)
+OS_GRID_ORDERS = ("mnk", "nmk", "kmn", "knm")
+ACCUM_MODES = ("scratch", "inplace")
+
+
+def _os_kernel_scratch(a_ref, b_ref, o_ref, acc_ref, *, n_k: int,
+                       k_axis: int, out_dtype):
+    @pl.when(pl.program_id(k_axis) == 0)
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
     acc_ref[...] += jnp.dot(a_ref[0], b_ref[0],
                             preferred_element_type=jnp.float32)
-    @pl.when(pl.program_id(3) == n_k - 1)
+    @pl.when(pl.program_id(k_axis) == n_k - 1)
     def _flush():
         o_ref[0] = acc_ref[...].astype(out_dtype)
+
+
+def _os_kernel_inplace(a_ref, b_ref, o_ref, *, n_k: int, k_axis: int,
+                       out_dtype):
+    @pl.when(pl.program_id(k_axis) == 0)
+    def _init():
+        o_ref[0] = jnp.zeros_like(o_ref[0])
+    o_ref[0] += jnp.dot(a_ref[0], b_ref[0],
+                        preferred_element_type=jnp.float32).astype(out_dtype)
 
 
 def matmul_output_stationary(a: jax.Array, b: jax.Array, *,
                              bm: int = DEFAULT_BLOCK, bn: int = DEFAULT_BLOCK,
                              bk: int = DEFAULT_BLOCK,
+                             grid_order: str = "mnk",
+                             accum: str = "scratch",
                              out_dtype=None, interpret: bool = False
                              ) -> jax.Array:
     from jax.experimental.pallas import tpu as pltpu
+    if grid_order == "default":
+        grid_order = "mnk"
+    elif grid_order in ("mn", "nm"):    # reduction-tree spelling: k innermost
+        grid_order += "k"
+    if grid_order not in OS_GRID_ORDERS:
+        raise ValueError(f"grid_order must be one of {OS_GRID_ORDERS}, "
+                         f"got {grid_order!r}")
+    if accum not in ACCUM_MODES:
+        raise ValueError(f"accum must be one of {ACCUM_MODES}, "
+                         f"got {accum!r}")
+    if accum == "scratch" and grid_order[-1] != "k":
+        raise ValueError(
+            f"grid_order {grid_order!r} revisits the output block between "
+            f"k-steps, which a single scratch accumulator cannot survive; "
+            f"use accum='inplace' for k-outer orders")
     a3, b3, nb, squeeze = _as_batched(a, b)
     (m, k), n = a3.shape[1:], b3.shape[2]
     _validate(m, n, k, bm, bn, bk)
     out_dtype = out_dtype or a.dtype
     n_k = k // bk
-    kernel = functools.partial(_os_kernel, n_k=n_k, out_dtype=out_dtype)
+    counts = {"m": m // bm, "n": n // bn, "k": n_k}
+    ix = {c: i for i, c in enumerate(grid_order)}   # imap arg position
+    k_axis = 1 + ix["k"]                            # grid axis incl. batch
+    if accum == "scratch":
+        kernel = functools.partial(_os_kernel_scratch, n_k=n_k,
+                                   k_axis=k_axis, out_dtype=out_dtype)
+        scratch = [pltpu.VMEM((bm, bn), jnp.float32)]
+    else:
+        kernel = functools.partial(_os_kernel_inplace, n_k=n_k,
+                                   k_axis=k_axis, out_dtype=out_dtype)
+        scratch = []
+    semantics = ("parallel",) + tuple(
+        "arbitrary" if c == "k" else "parallel" for c in grid_order)
     out = pl.pallas_call(
         kernel,
-        grid=(nb, m // bm, n // bn, n_k),
+        grid=(nb,) + tuple(counts[c] for c in grid_order),
         in_specs=[_bspec((bm, bk), a3.shape[0] > 1,
-                         lambda i, j, kk: (i, kk)),
+                         lambda *ids: (ids[ix["m"]], ids[ix["k"]])),
                   _bspec((bk, bn), b3.shape[0] > 1,
-                         lambda i, j, kk: (kk, j))],
-        out_specs=pl.BlockSpec((1, bm, bn),
-                               lambda bb, i, j, kk: (bb, i, j)),
+                         lambda *ids: (ids[ix["k"]], ids[ix["n"]]))],
+        out_specs=pl.BlockSpec(
+            (1, bm, bn),
+            lambda bb, *ids: (bb, ids[ix["m"]], ids[ix["n"]])),
         out_shape=jax.ShapeDtypeStruct((nb, m, n), out_dtype),
-        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        scratch_shapes=scratch,
         compiler_params=_compat.CompilerParams(
-            dimension_semantics=("parallel", "parallel", "parallel",
-                                 "arbitrary")),
+            dimension_semantics=semantics),
         interpret=interpret,
     )(a3, b3)
     return out[0] if squeeze else out
@@ -237,21 +298,37 @@ def _rt_kernel(a_ref, b_ref, o_ref, *, out_dtype):
                        preferred_element_type=jnp.float32).astype(out_dtype)
 
 
+#: valid reduction-tree grid orders (no k axis: the whole reduction runs
+#: inside one MXU pass)
+RT_GRID_ORDERS = ("mn", "nm")
+
+
 def matmul_reduction_tree(a: jax.Array, b: jax.Array, *,
                           bm: int = DEFAULT_BLOCK, bn: int = DEFAULT_BLOCK,
+                          grid_order: str = "mn",
                           out_dtype=None, interpret: bool = False
                           ) -> jax.Array:
+    if grid_order == "default":
+        grid_order = "mn"
+    if grid_order not in RT_GRID_ORDERS:
+        raise ValueError(f"grid_order must be one of {RT_GRID_ORDERS}, "
+                         f"got {grid_order!r}")
     a3, b3, nb, squeeze = _as_batched(a, b)
     (m, k), n = a3.shape[1:], b3.shape[2]
     _validate(m, n, k, bm, bn, k)
     out_dtype = out_dtype or a.dtype
+    counts = {"m": m // bm, "n": n // bn}
+    ix = {c: i for i, c in enumerate(grid_order)}
     kernel = functools.partial(_rt_kernel, out_dtype=out_dtype)
     out = pl.pallas_call(
         kernel,
-        grid=(nb, m // bm, n // bn),
-        in_specs=[_bspec((bm, k), a3.shape[0] > 1, lambda i, j: (i, 0)),
-                  _bspec((k, bn), b3.shape[0] > 1, lambda i, j: (0, j))],
-        out_specs=pl.BlockSpec((1, bm, bn), lambda bb, i, j: (bb, i, j)),
+        grid=(nb,) + tuple(counts[c] for c in grid_order),
+        in_specs=[_bspec((bm, k), a3.shape[0] > 1,
+                         lambda *ids: (ids[ix["m"]], 0)),
+                  _bspec((k, bn), b3.shape[0] > 1,
+                         lambda *ids: (0, ids[ix["n"]]))],
+        out_specs=pl.BlockSpec(
+            (1, bm, bn), lambda bb, *ids: (bb, ids[ix["m"]], ids[ix["n"]])),
         out_shape=jax.ShapeDtypeStruct((nb, m, n), out_dtype),
         compiler_params=_compat.CompilerParams(
             dimension_semantics=("parallel", "parallel", "parallel")),

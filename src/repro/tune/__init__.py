@@ -1,0 +1,27 @@
+"""Measured autotuning (ISSUE 6): close the cost-model / machine gap.
+
+Layer 2b of the stack — between the analytical pipeline (Layer 2:
+``core.dse`` ranks, ``core.tiling`` picks blocks) and the executing
+kernels (Layer 3):
+
+* :mod:`~repro.tune.measure` — the one shared wall-clock harness,
+* :mod:`~repro.tune.tuner` — timed variant search over candidate
+  dataflows x kernel knobs, persisted winners,
+* :mod:`~repro.tune.cache` — the on-disk tuning cache ``lower()``
+  consults before the analytical tile chooser,
+* :mod:`~repro.tune.calibrate` — measured/model cycle scales that turn
+  ``PaperCycleModel`` predictions into machine-tracking ones,
+* :mod:`~repro.tune.report` — the BENCH_tune.json schema + validator.
+"""
+from . import cache, calibrate, measure, report, tuner  # noqa: F401
+from .calibrate import Calibration, fit as fit_calibration  # noqa: F401
+from .calibrate import load as load_calibration  # noqa: F401
+from .measure import Measurement, measure as measure_fn  # noqa: F401
+from .tuner import TuneResult, Variant, rank_measured, tune  # noqa: F401
+
+__all__ = [
+    "cache", "calibrate", "measure", "report", "tuner",
+    "Calibration", "fit_calibration", "load_calibration",
+    "Measurement", "measure_fn",
+    "TuneResult", "Variant", "rank_measured", "tune",
+]

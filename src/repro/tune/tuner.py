@@ -1,0 +1,326 @@
+"""The measurement-driven autotuner (ISSUE 6 tentpole).
+
+The analytical pipeline ranks designs with ``PaperCycleModel`` and picks
+block sizes with the shared tile chooser — both first-principles models
+that a real machine (even interpret-mode Pallas on CPU) disagrees with.
+``tune()`` closes the gap:
+
+    1. take the top-``search`` candidates from the analytical ranking
+       (``core.dse.search`` — blocks x template x dataflow x partition),
+    2. expand each into kernel *variants* over the measured-tuning knobs
+       (block sizes, contraction grid order, accumulation strategy),
+    3. time every variant with the shared harness
+       (``measure.measure``: warmup + median-of-k, ``block_until_ready``),
+       validating each against the untuned kernel's output,
+    4. persist the winner in the on-disk tuning cache keyed exactly like
+       the compile cache — so later ``lower()``/``generate()`` calls in
+       *any* process pick it up without re-measuring, and
+    5. feed the top-1 analytical measurement into the calibration fit
+       (``calibrate.record``) so the cost model's predictions track the
+       machine.
+
+The untuned analytical variant is always trial #0, so the tuned pick is
+never slower than untuned *by construction* (CI's tune smoke step relies
+on this).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..compile import pipeline
+from ..core import dse, linalg, stt as stt_mod
+from ..core.algebra import TensorAlgebra
+from ..core.stt import Dataflow
+from ..core.tiling import ArrayConfig
+from ..kernels import stt_gemm as _gemm
+from . import cache as _cache
+from . import calibrate as _calibrate
+from .measure import DEFAULT_REPEATS, DEFAULT_WARMUP, Measurement, measure
+
+#: trial-count ceiling (variants per tune() call, across all candidate
+#: dataflows); the knob grid is pruned to fit
+DEFAULT_MAX_TRIALS = 32
+
+#: relative-error gates for validating a variant against the untuned
+#: kernel's output (integer random operands make fp32 scratch exact; the
+#: bf16-direct accumulation strategy is allowed its rounding, and is
+#: rejected when it exceeds the gate)
+_REL_TOL = {"float32": 1e-4, "bfloat16": 2e-2, "float16": 2e-2}
+
+
+@dataclasses.dataclass(frozen=True)
+class Variant:
+    """One point in the kernel-knob space the tuner searches."""
+
+    blocks: Tuple[int, int, int]
+    grid_order: str = "default"
+    accum: str = "auto"
+
+
+@dataclasses.dataclass(frozen=True)
+class Trial:
+    """One measured (or rejected) variant of one candidate dataflow."""
+
+    dataflow_name: str
+    variant: Variant
+    measurement: Optional[Measurement]   # None when the variant failed
+    ok: bool
+    error: str = ""
+
+    @property
+    def median_s(self) -> float:
+        return self.measurement.median_s if self.measurement else float("inf")
+
+
+@dataclasses.dataclass
+class TuneResult:
+    """What a ``tune()`` call produced.
+
+    ``kernel`` is lowered with the winning variant (``source == "tuned"``);
+    ``untuned_s`` is the analytical pick's measured median, ``tuned_s``
+    the winner's, so ``speedup`` is a same-session apples-to-apples
+    ratio.  ``cache_hit`` means the on-disk choice cache answered and no
+    measurement ran (``trials`` is empty).
+    """
+
+    kernel: pipeline.CompiledKernel
+    dataflow: Dataflow
+    variant: Variant
+    tuned_s: Optional[float]
+    untuned_s: Optional[float]
+    cache_hit: bool
+    trials: Tuple[Trial, ...] = ()
+
+    @property
+    def speedup(self) -> Optional[float]:
+        if self.tuned_s and self.untuned_s:
+            return self.untuned_s / self.tuned_s
+        return None
+
+
+def _t_rows(T: linalg.Mat) -> List[List[int]]:
+    return [[int(v) for v in row] for row in T]
+
+
+def _clamp_blocks(blocks: Tuple[int, int, int], dims: Tuple[int, int, int]
+                  ) -> Tuple[int, int, int]:
+    return tuple(max(1, min(b, d)) for b, d in zip(blocks, dims))
+
+
+def block_candidates(analytical: Tuple[int, int, int],
+                     dims: Tuple[int, int, int]
+                     ) -> List[Tuple[int, int, int]]:
+    """Block-size candidates around the analytical pick: the pick itself
+    (trial #0's variant), hardware-friendly clamps (128/256), the full
+    problem capped at 512 (fewest grid steps — the big interpret-mode
+    win), and the pick doubled.  Deduped, analytical first."""
+    cands = [
+        analytical,
+        _clamp_blocks((128, 128, 128), dims),
+        _clamp_blocks((256, 256, 256), dims),
+        _clamp_blocks((512, 512, 512), dims),
+        _clamp_blocks(tuple(b * 2 for b in analytical), dims),
+    ]
+    out: List[Tuple[int, int, int]] = []
+    for c in cands:
+        c = _clamp_blocks(c, dims)
+        if c not in out:
+            out.append(c)
+    return out
+
+
+def _knob_grid(template: str) -> List[Tuple[str, str]]:
+    """(grid_order, accum) combos valid for a template — the analytical
+    default first, so trial #0 is exactly the untuned kernel."""
+    if template == "output_stationary":
+        combos = [("default", "auto")]
+        combos += [(o, "scratch") for o in _gemm.OS_GRID_ORDERS
+                   if o != "mnk"]          # "default" == mnk + scratch
+        combos += [(o, "inplace") for o in _gemm.OS_GRID_ORDERS]
+        return combos
+    if template in ("reduction_tree", "streaming"):
+        return [("default", "auto"), ("nm", "auto")]
+    # operand_stationary has a fixed streaming order; only blocks vary
+    return [("default", "auto")]
+
+
+def _rel_err(got: np.ndarray, want: np.ndarray) -> float:
+    scale = float(np.abs(want).max()) if want.size else 0.0
+    if got.shape != want.shape:
+        return float("inf")
+    err = float(np.abs(got - want).max()) if want.size else 0.0
+    return err / (scale + 1e-30)
+
+
+def _lower_kwargs(cfg, dtype, interpret, backend) -> Dict:
+    return dict(cfg=cfg, dtype=dtype, interpret=interpret, backend=backend)
+
+
+def tune(alg: TensorAlgebra, dataflow: Optional[Dataflow] = None, *,
+         search: int = 4,
+         cfg: ArrayConfig = ArrayConfig(),
+         dtype=jnp.float32,
+         interpret: bool = False,
+         backend: str = "pallas",
+         repeats: int = DEFAULT_REPEATS,
+         warmup: int = DEFAULT_WARMUP,
+         force: bool = False,
+         validate: Optional[bool] = None,
+         max_trials: int = DEFAULT_MAX_TRIALS,
+         seed: int = 0) -> TuneResult:
+    """Measure-and-pick: the best (dataflow, variant) for ``alg`` on this
+    machine, persisted for later processes.
+
+    ``dataflow`` pins the schedule (only kernel variants are searched);
+    otherwise the top-``search`` analytical candidates from
+    ``dse.search`` each contribute variants.  ``force=True`` bypasses the
+    on-disk choice cache and re-measures.  ``validate`` controls the
+    *oracle* validation of the final kernel (default: auto, small
+    problems only); every trial is always gated on matching the untuned
+    kernel's output.
+    """
+    lkw = _lower_kwargs(cfg, dtype, interpret, backend)
+    shape_key = _cache.shape_key_for(alg, cfg, dtype, interpret, backend)
+
+    if not force:
+        choice = _cache.lookup_choice(shape_key)
+        if choice is not None:
+            df = stt_mod.apply_stt(alg, tuple(choice["selected"]),
+                                   linalg.mat(choice["T"]))
+            if dataflow is None or df.signature == dataflow.signature:
+                v = choice["variant"]
+                # no explicit knobs: lower() consults the variant cache
+                # itself, so the kernel comes back source == "tuned"
+                kernel = pipeline.lower(alg, df, validate=validate, **lkw)
+                variant = Variant(tuple(v["blocks"]), v["grid_order"],
+                                  v["accum"])
+                return TuneResult(
+                    kernel=kernel, dataflow=df, variant=variant,
+                    tuned_s=v.get("measured_s"),
+                    untuned_s=v.get("untuned_s"),
+                    cache_hit=True, trials=())
+
+    if dataflow is not None:
+        pairs = [(None, dataflow)]
+    else:
+        pairs = dse.search(alg, top_k=max(1, search), cfg=cfg)
+
+    operands = alg.random_operands(seed)
+    tol = _REL_TOL.get(jnp.dtype(dtype).name, 2e-2)
+
+    # --- trial #0: the untuned analytical pick (top-1 candidate) --------
+    untuned_df = pairs[0][1]
+    untuned_kernel = pipeline.lower(alg, untuned_df, validate=validate,
+                                    tuned=False, **lkw)
+    ref_out = np.asarray(untuned_kernel(operands), dtype=np.float64)
+    untuned_meas = measure(untuned_kernel, operands,
+                           warmup=warmup, repeats=repeats)
+    trials: List[Trial] = [Trial(
+        dataflow_name=untuned_df.name,
+        variant=Variant(untuned_kernel.blocks, "default", "auto"),
+        measurement=untuned_meas, ok=True)]
+    best = (untuned_meas.median_s, untuned_df, trials[0].variant,
+            untuned_kernel)
+
+    # --- the variant sweep ---------------------------------------------
+    for _, df in pairs:
+        if len(trials) > max_trials:
+            break
+        base = pipeline.lower(alg, df, validate=False, tuned=False, **lkw)
+        dims = (base.form.m, base.form.n, base.form.k)
+        for blocks in block_candidates(base.blocks, dims):
+            for grid_order, accum in _knob_grid(base.template):
+                variant = Variant(blocks, grid_order, accum)
+                if df is untuned_df and variant == trials[0].variant:
+                    continue            # already measured as trial #0
+                if len(trials) > max_trials:
+                    break
+                try:
+                    k = pipeline.lower(alg, df, validate=False,
+                                       blocks=blocks, grid_order=grid_order,
+                                       accum=accum, **lkw)
+                    got = np.asarray(k(operands), dtype=np.float64)
+                    err = _rel_err(got, ref_out)
+                    if err > tol:
+                        trials.append(Trial(df.name, variant, None, False,
+                                            f"rel err {err:.3e} > {tol}"))
+                        continue
+                    meas = measure(k, operands, warmup=warmup,
+                                   repeats=repeats)
+                except Exception as e:  # invalid knob combo, OOM, ...
+                    trials.append(Trial(df.name, variant, None, False,
+                                        f"{type(e).__name__}: {e}"))
+                    continue
+                trials.append(Trial(df.name, variant, meas, True))
+                if meas.median_s < best[0]:
+                    best = (meas.median_s, df, variant, k)
+
+    tuned_s, win_df, win_variant, win_kernel = best
+
+    # --- calibration: anchor the cost model on the winner's measurement
+    # (newest record per (template, algebra) supersedes older ones, so
+    # the fitted scale maps the analytical prediction onto what this
+    # machine actually runs after tuning)
+    _calibrate.record(
+        win_kernel.template, alg.name, win_kernel.cost_report().cycles,
+        tuned_s * cfg.freq_mhz * 1e6,
+        meta={"interpret": bool(interpret), "backend": backend,
+              "dtype": jnp.dtype(dtype).name, "dataflow": win_df.name})
+
+    # --- persist: variant under the compile key, choice per algebra ----
+    base_key = pipeline._cache_key(alg, win_df, cfg, jnp.dtype(dtype),
+                                   interpret, backend)
+    entry = _cache.store_variant(
+        _cache.key_of(base_key), blocks=win_variant.blocks,
+        grid_order=win_variant.grid_order, accum=win_variant.accum,
+        measured_s=tuned_s, untuned_s=untuned_meas.median_s,
+        meta={"algebra": alg.name, "dataflow": win_df.name,
+              "template": win_kernel.template})
+    _cache.store_choice(
+        shape_key, selected=win_df.selected, T=_t_rows(win_df.T),
+        variant=entry, dataflow_name=win_df.name)
+
+    # label the winner with its measurement (the compile cache shares the
+    # object, so later lower() hits in this process see it too)
+    win_kernel.source = "tuned"
+    win_kernel.measured_s = tuned_s
+    if validate and not win_kernel.validated:
+        # trials only gate on matching the untuned output; an explicit
+        # validate=True also runs the winner against the python oracle
+        win_kernel.validate()
+
+    return TuneResult(
+        kernel=win_kernel, dataflow=win_df, variant=win_variant,
+        tuned_s=tuned_s, untuned_s=untuned_meas.median_s,
+        cache_hit=False, trials=tuple(trials))
+
+
+def rank_measured(alg: TensorAlgebra,
+                  pairs: Sequence[Tuple[object, Dataflow]], *,
+                  cfg: ArrayConfig = ArrayConfig(),
+                  dtype=jnp.float32,
+                  interpret: bool = False,
+                  backend: str = "pallas",
+                  repeats: int = DEFAULT_REPEATS,
+                  warmup: int = DEFAULT_WARMUP,
+                  seed: int = 0
+                  ) -> List[Tuple[object, Dataflow, float]]:
+    """Re-rank ``(report, dataflow)`` candidates by *measured* wall clock.
+
+    Each candidate is lowered with its analytical variant and timed with
+    the shared harness; the result is a permutation of the input pairs
+    (nothing added, nothing dropped) extended with the measured median
+    seconds — measurement reorders the analytical ranking, it never
+    invents candidates."""
+    operands = alg.random_operands(seed)
+    lkw = _lower_kwargs(cfg, dtype, interpret, backend)
+    timed = []
+    for rep, df in pairs:
+        kernel = pipeline.lower(alg, df, validate=False, tuned=False, **lkw)
+        meas = measure(kernel, operands, warmup=warmup, repeats=repeats)
+        timed.append((rep, df, meas.median_s))
+    return sorted(timed, key=lambda t: t[2])

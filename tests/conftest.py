@@ -1,0 +1,19 @@
+"""Shared test fixtures.
+
+The measured-tuning cache (``repro.tune.cache``) persists to
+``$REPRO_TUNE_CACHE`` (default ``~/.cache/repro-tune``) and ``lower()``
+consults it before the analytical tile chooser — so a leftover cache
+from a developer's tuning run would silently change block sizes under
+tests that assert analytical behavior.  Every test therefore gets a
+fresh, empty cache directory.
+"""
+import pytest
+
+
+@pytest.fixture(autouse=True)
+def _isolated_tune_cache(tmp_path, monkeypatch):
+    monkeypatch.setenv("REPRO_TUNE_CACHE", str(tmp_path / "repro-tune"))
+    from repro.tune import cache
+    cache.cache_clear(counters_only=True)
+    yield
+    cache.cache_clear(counters_only=True)
