@@ -10,6 +10,8 @@ Sections:
          wall time; oracle parity)
   tune   — measured autotuning smoke: tuned vs untuned wall clock per cell,
          calibrated cycle model, BENCH_tune.json emission
+  serve  — continuous-batching vs static-batch serving load (open-loop,
+         mixed lengths; parity + speedup gate, BENCH_serve.json emission)
   table3 — MM throughput comparison (XLA baselines + TPU roofline projection)
   roofline — aggregated dry-run roofline table (if results/dryrun exists)
 """
@@ -70,6 +72,22 @@ def main() -> None:
         perf_iterate.run_tune_cells(smoke=True)
     except Exception:
         failures.append("tune")
+        traceback.print_exc()
+
+    _section("Serving load — continuous vs static batching")
+    try:
+        import json
+        import pathlib
+
+        from benchmarks import serve_load
+        from repro.serve.report import validate_serve
+        serve_load.main(["--smoke"])
+        doc = json.loads((pathlib.Path(__file__).parent.parent
+                          / "BENCH_serve.json").read_text())
+        problems = validate_serve(doc)
+        assert not problems, f"BENCH_serve.json invalid: {problems}"
+    except Exception:
+        failures.append("serve")
         traceback.print_exc()
 
     _section("Table III — matmul throughput comparison")

@@ -18,6 +18,8 @@ Modules:
                 single-chip, plus SUMMA/Cannon/ring-reduce-as-oracle
                 (both run as ``python -m repro.dist.<name>`` with
                 ``--xla_force_host_platform_device_count=8``)
+    serve_selftest — continuous-batching page pools sharded through the
+                partition solver stay bit-identical to unsharded decode
 """
 from . import comm_engine, engine, schedules
 from .comm_engine import compile_comm_plan

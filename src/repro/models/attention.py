@@ -111,7 +111,11 @@ def _decode_attn(q, k_cache, v_cache, *, pos, window, cache_len):
     """q: (B, Hq, 1, dh); caches (B, Hkv, S, dh); attend to entries < pos+1.
 
     With a rolling (SWA) cache the entries are position-tagged modulo the
-    cache length, so validity is derived from absolute positions.
+    cache length, so validity is derived from absolute positions.  ``pos``
+    may be a scalar (one shared position, the classic batched decode) or a
+    ``(B,)`` vector (per-slot positions, continuous batching): the masks
+    vectorize over the batch and each row computes exactly what it would
+    with that row's scalar position.
     """
     b, hq, _, dh = q.shape
     hkv, s = k_cache.shape[1], k_cache.shape[2]
@@ -121,17 +125,24 @@ def _decode_attn(q, k_cache, v_cache, *, pos, window, cache_len):
     vf = jnp.repeat(v_cache.astype(jnp.float32), group, axis=1)
     scores = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32) * scale, kf)
     slots = jnp.arange(s)
+    pos_a = jnp.asarray(pos)
+    if pos_a.ndim:
+        pos_b, slots = pos_a[:, None], slots[None, :]      # (B, 1) x (1, S)
+    else:
+        pos_b = pos_a
     if window is None:
-        valid = slots <= pos                       # linear cache
+        valid = slots <= pos_b                     # linear cache
     elif cache_len > window:
-        valid = (slots <= pos) & (slots > pos - window)   # linear + SWA
+        valid = (slots <= pos_b) & (slots > pos_b - window)  # linear + SWA
     else:
         # rolling cache: slot holds absolute position p iff p = pos - ((pos -
         # slot) mod S); valid iff within window and <= pos (always true once
         # warm). Entries beyond pos when cold (pos < S) are invalid.
-        abs_pos = pos - ((pos - slots) % s)
-        valid = (abs_pos >= 0) & (abs_pos > pos - window)
-    scores = jnp.where(valid[None, None, None, :], scores, NEG_INF)
+        abs_pos = pos_b - ((pos_b - slots) % s)
+        valid = (abs_pos >= 0) & (abs_pos > pos_b - window)
+    valid = valid[:, None, None, :] if pos_a.ndim \
+        else valid[None, None, None, :]
+    scores = jnp.where(valid, scores, NEG_INF)
     p = jax.nn.softmax(scores, axis=-1)
     out = jnp.einsum("bhqk,bhkd->bhqd", p, vf)
     return out.astype(q.dtype)
@@ -220,8 +231,14 @@ def apply_attention(p: Dict, x: jax.Array, cfg: ModelConfig, *,
 
     if is_self:
         if positions is None:
-            positions = (jnp.arange(lq) if pos is None
-                         else jnp.full((lq,), pos, jnp.int32))
+            if pos is None:
+                positions = jnp.arange(lq)
+            elif jnp.asarray(pos).ndim:
+                # per-slot positions (continuous batching): (B, lq) rope
+                positions = jnp.broadcast_to(
+                    jnp.asarray(pos, jnp.int32)[:, None], (b, lq))
+            else:
+                positions = jnp.full((lq,), pos, jnp.int32)
         qh = common.rope(qh, positions, cfg.rope_theta)
         if not static_cross:
             kh = common.rope(kh, positions, cfg.rope_theta)
@@ -240,13 +257,22 @@ def apply_attention(p: Dict, x: jax.Array, cfg: ModelConfig, *,
                            pos=s_cache - 1, window=None, cache_len=s_cache)
     elif cache is not None:
         s_cache = cache["k"].shape[1]
-        slot = pos % s_cache
         k_flat = kh.transpose(0, 2, 1, 3).reshape(b, lq, cfg.kv_dim)
         v_flat = vh.transpose(0, 2, 1, 3).reshape(b, lq, cfg.kv_dim)
-        ck = jax.lax.dynamic_update_slice(
-            cache["k"], k_flat.astype(cache["k"].dtype), (0, slot, 0))
-        cv = jax.lax.dynamic_update_slice(
-            cache["v"], v_flat.astype(cache["v"].dtype), (0, slot, 0))
+        if jnp.asarray(pos).ndim:
+            # per-slot write positions: one scatter row per batch lane
+            slot = jnp.asarray(pos, jnp.int32) % s_cache
+            rows = jnp.arange(b)
+            ck = cache["k"].at[rows, slot].set(
+                k_flat[:, 0].astype(cache["k"].dtype))
+            cv = cache["v"].at[rows, slot].set(
+                v_flat[:, 0].astype(cache["v"].dtype))
+        else:
+            slot = pos % s_cache
+            ck = jax.lax.dynamic_update_slice(
+                cache["k"], k_flat.astype(cache["k"].dtype), (0, slot, 0))
+            cv = jax.lax.dynamic_update_slice(
+                cache["v"], v_flat.astype(cache["v"].dtype), (0, slot, 0))
         new_cache = {"k": ck, "v": cv}
         # rope for cached keys is applied at write time (above); a rolling
         # cache stores *rotated* keys, which is fine because rope is

@@ -2,7 +2,10 @@
 
 The decode cache layout (one pytree, sharded like activations):
 
-    {"pos":   ()  int32 — absolute position of the NEXT token,
+    {"pos":   () or (B,) int32 — absolute position of the NEXT token
+              (a (B,) vector gives every sequence its own position, which
+              is what lets the serving slot engine mix sequences of
+              different lengths in one jitted decode batch),
      "self":  {"k","v"} (L, B, S_c, kv_dim)      attention families
      "ssm":   {"conv","state"} (L, B, ...)       ssm / hybrid
      "shared":{"k","v"} (n_apps, B, S_c, kv_dim) hybrid shared-attn
@@ -141,6 +144,12 @@ def init_cache(params: Dict, cfg: ModelConfig, batch: int, seq_len: int, *,
 def decode_step(params: Dict, tokens: jax.Array, cache: Dict[str, Any],
                 cfg: ModelConfig) -> Tuple[jax.Array, Dict[str, Any]]:
     """tokens: (B, 1) int32 — one new token per sequence.
+
+    ``cache["pos"]`` may be a scalar (all sequences at the same position,
+    the classic batched decode) or a ``(B,)`` vector (per-sequence
+    positions, continuous batching); rope, validity masks and cache writes
+    vectorize accordingly and each row computes exactly what it would with
+    that row's scalar position.
 
     Returns (logits (B, vocab), updated cache)."""
     compute = jnp.dtype(cfg.dtype)

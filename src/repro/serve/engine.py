@@ -36,10 +36,15 @@ class ServeConfig:
 
 class DecodeEngine:
     def __init__(self, params, cfg: ModelConfig,
-                 serve_cfg: ServeConfig = ServeConfig()):
+                 serve_cfg: Optional[ServeConfig] = None):
+        # NOTE: the default must be None + construct-per-instance.  A
+        # ``serve_cfg: ServeConfig = ServeConfig()`` default evaluates ONE
+        # shared instance at import time — mutating one engine's config
+        # would silently reconfigure every other engine (regression-tested
+        # in tests/test_serve_engine.py).
         self.params = params
         self.cfg = cfg
-        self.serve_cfg = serve_cfg
+        self.serve_cfg = serve_cfg if serve_cfg is not None else ServeConfig()
         self._prefill = jax.jit(functools.partial(dec.prefill, cfg=cfg),
                                 static_argnames=("max_len",))
         self._step = jax.jit(functools.partial(dec.decode_step, cfg=cfg))
@@ -47,12 +52,22 @@ class DecodeEngine:
     def generate(self, prompts: np.ndarray, *,
                  frontend: Optional[np.ndarray] = None,
                  max_new_tokens: Optional[int] = None,
+                 cache_len: Optional[int] = None,
                  ) -> Tuple[np.ndarray, Dict]:
-        """prompts: (B, S0) int32.  Returns (generated (B, T), stats)."""
+        """prompts: (B, S0) int32.  Returns (generated (B, T), stats).
+
+        ``cache_len`` overrides the decode cache's context budget (default
+        ``S0 + max_new_tokens``).  The continuous-batching slot engine
+        gathers fixed-length page views, so its sequential parity oracle
+        is this method with ``cache_len`` pinned to the engine's
+        ``max_context`` — same cache shape, bit-identical math."""
         scfg = self.serve_cfg
         t_new = max_new_tokens or scfg.max_new_tokens
         b, s0 = prompts.shape
-        max_len = s0 + t_new
+        max_len = cache_len or (s0 + t_new)
+        if max_len < s0 + t_new:
+            raise ValueError(f"cache_len {max_len} < prompt {s0} + "
+                             f"new tokens {t_new}")
         logits, cache = self._prefill(
             self.params, jnp.asarray(prompts),
             frontend=None if frontend is None else jnp.asarray(frontend),

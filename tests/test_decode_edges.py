@@ -1,0 +1,103 @@
+"""models/decode.py edge cases (ISSUE 7 satellite).
+
+``_fit_cache`` window fitting (roll alignment + padding), prefill with
+the prompt already at ``max_len`` exactly, and EOS fired by the very
+first decoded token.
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.models import forward, init_params, split
+from repro.models.decode import _fit_cache, decode_step, prefill
+from repro.serve import DecodeEngine, ServeConfig
+
+
+def setup_arch(arch):
+    cfg = get_config(arch).reduced()
+    params, _ = split(init_params(jax.random.PRNGKey(0), cfg))
+    return cfg, params
+
+
+# ---------------------------------------------------------------------------
+# _fit_cache
+# ---------------------------------------------------------------------------
+
+def _seq_cache(s0):
+    """(L, B, S0, kv) leaf whose value encodes its absolute position."""
+    return {"k": jnp.broadcast_to(
+        jnp.arange(s0, dtype=jnp.float32)[None, None, :, None],
+        (2, 1, s0, 4))}
+
+
+def test_fit_cache_linear_pads_to_max_len():
+    out = _fit_cache(_seq_cache(5), window=None, max_len=12, s0=5)["k"]
+    assert out.shape == (2, 1, 12, 4)
+    np.testing.assert_array_equal(out[0, 0, :5, 0], np.arange(5))
+    np.testing.assert_array_equal(out[0, 0, 5:, 0], np.zeros(7))
+
+
+def test_fit_cache_rolling_keeps_last_window_aligned():
+    """SWA: slot i must hold absolute position with ``pos % s_cache == i``
+    — that alignment is what decode's rolling write depends on."""
+    s0, window = 10, 4
+    out = _fit_cache(_seq_cache(s0), window=window, max_len=16, s0=s0)["k"]
+    assert out.shape == (2, 1, window, 4)
+    kept = sorted(int(v) for v in np.asarray(out[0, 0, :, 0]))
+    assert kept == [6, 7, 8, 9]            # the last `window` positions
+    for slot in range(window):
+        assert int(out[0, 0, slot, 0]) % window == slot
+
+
+def test_fit_cache_rolling_window_divides_s0_no_roll():
+    s0, window = 8, 4
+    out = _fit_cache(_seq_cache(s0), window=window, max_len=16, s0=s0)["k"]
+    np.testing.assert_array_equal(np.asarray(out[0, 0, :, 0]),
+                                  [4, 5, 6, 7])  # already aligned
+
+
+def test_fit_cache_prompt_shorter_than_window_pads():
+    out = _fit_cache(_seq_cache(3), window=8, max_len=16, s0=3)["k"]
+    assert out.shape == (2, 1, 8, 4)
+    np.testing.assert_array_equal(out[0, 0, :3, 0], [0, 1, 2])
+    assert np.asarray(out[0, 0, 3:, 0]).sum() == 0
+
+
+# ---------------------------------------------------------------------------
+# prefill exactly at max_len
+# ---------------------------------------------------------------------------
+
+def test_prefill_at_max_len_exactly_matches_forward():
+    """A prompt that fills the whole context budget: prefill's last-token
+    logits must equal forward's, and one more decode step still works
+    (SWA rolls; linear caches simply have no free slot left to read)."""
+    cfg, params = setup_arch("h2o-danube-1.8b")   # SWA: rolling cache
+    s = 32
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, s), 0, cfg.vocab)
+    logits_f, _, _ = forward(params, toks, cfg)
+    logits_p, cache = prefill(params, toks, cfg, max_len=s)
+    np.testing.assert_array_equal(np.asarray(logits_p),
+                                  np.asarray(logits_f[:, -1]))
+    assert int(cache["pos"]) == s
+    nxt = jnp.argmax(logits_p, axis=-1)[:, None].astype(jnp.int32)
+    logits_d, cache2 = decode_step(params, nxt, cache, cfg)
+    assert np.isfinite(np.asarray(logits_d)).all()
+    assert int(cache2["pos"]) == s + 1
+
+
+# ---------------------------------------------------------------------------
+# EOS on the first decoded token
+# ---------------------------------------------------------------------------
+
+def test_eos_on_first_decoded_token_stops_generation():
+    cfg, params = setup_arch("granite-8b")
+    prompts = (np.arange(12, dtype=np.int32) % cfg.vocab)[None]
+    probe = DecodeEngine(params, cfg)
+    first = int(probe.generate(prompts, max_new_tokens=1)[0][0, 0])
+
+    engine = DecodeEngine(params, cfg, ServeConfig(eos_id=first))
+    gen, stats = engine.generate(prompts, max_new_tokens=8)
+    assert gen.shape == (1, 1)             # stopped immediately
+    assert int(gen[0, 0]) == first
+    assert stats["generated"] == 1

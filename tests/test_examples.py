@@ -24,9 +24,9 @@ def test_quickstart():
 
 
 def test_serve_lm():
-    out = run_example("serve_lm.py", "--batch", "2", "--prompt-len", "12",
-                      "--new-tokens", "4")
+    out = run_example("serve_lm.py", "--capacity", "3")
     assert "serve OK" in out
+    assert "decode compiles 1" in out
 
 
 def test_train_lm_short(tmp_path):

@@ -1,0 +1,83 @@
+"""serve/engine.py satellites (ISSUE 7): ServeConfig default-sharing
+regression + AcceleratorEngine thread-safety under concurrent submits."""
+import threading
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.models import init_params, split
+from repro.serve import AcceleratorEngine, DecodeEngine, ServeConfig
+
+
+# ---------------------------------------------------------------------------
+# ServeConfig must not be shared across engines (mutable-default bug)
+# ---------------------------------------------------------------------------
+
+def test_decode_engines_do_not_share_default_serve_config():
+    cfg = get_config("granite-8b").reduced()
+    params, _ = split(init_params(jax.random.PRNGKey(0), cfg))
+    a = DecodeEngine(params, cfg)
+    b = DecodeEngine(params, cfg)
+    assert a.serve_cfg is not b.serve_cfg
+    a.serve_cfg.eos_id = 7
+    a.serve_cfg.max_new_tokens = 99
+    assert b.serve_cfg.eos_id is None      # b must be unaffected
+    assert b.serve_cfg.max_new_tokens == 32
+
+
+def test_explicit_serve_config_is_used_as_given():
+    cfg = get_config("granite-8b").reduced()
+    params, _ = split(init_params(jax.random.PRNGKey(0), cfg))
+    scfg = ServeConfig(max_new_tokens=3)
+    eng = DecodeEngine(params, cfg, scfg)
+    assert eng.serve_cfg is scfg
+    gen, _ = eng.generate(np.ones((1, 4), np.int32))
+    assert gen.shape == (1, 3)
+
+
+# ---------------------------------------------------------------------------
+# AcceleratorEngine: concurrent submits
+# ---------------------------------------------------------------------------
+
+def test_accelerator_engine_concurrent_submits():
+    """8 threads x mixed algebras/shapes: every result matches the
+    reference einsum, the handle cache holds one accelerator per request
+    signature, and the stats counter equals the number of submits."""
+    engine = AcceleratorEngine(interpret=True)
+    shapes = [{"m": 16, "k": 16, "n": 16}, {"m": 32, "k": 16, "n": 16}]
+    per_thread = 3
+    n_threads = 8
+    errors = []
+
+    def worker(tid):
+        rng = np.random.default_rng(tid)   # Generators are not thread-safe
+        try:
+            for i in range(per_thread):
+                bounds = shapes[(tid + i) % len(shapes)]
+                a = jnp.asarray(rng.standard_normal(
+                    (bounds["m"], bounds["k"])).astype(np.float32))
+                b = jnp.asarray(rng.standard_normal(
+                    (bounds["n"], bounds["k"])).astype(np.float32))
+                out = engine.submit("gemm", {"A": a, "B": b}, bounds=bounds)
+                # paper layout: C[m,n] += A[m,k] * B[n,k]
+                want = np.asarray(a) @ np.asarray(b).T
+                np.testing.assert_allclose(np.asarray(out), want,
+                                           rtol=1e-4, atol=1e-4)
+        except Exception as e:             # surfaced after join
+            errors.append((tid, e))
+
+    threads = [threading.Thread(target=worker, args=(t,))
+               for t in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errors, errors
+    stats = engine.stats()
+    assert stats["requests"] == n_threads * per_thread
+    assert stats["algebras"] == ["gemm"]
+    # one cached handle per distinct request signature — racing submits
+    # must not have stamped duplicates over each other
+    assert len(engine._accs) == len(shapes)
