@@ -1,0 +1,104 @@
+"""bench-regress gate: validate emitted BENCH_*.json + enforce floors.
+
+    PYTHONPATH=src python -m benchmarks.check_regress
+
+Run after ``benchmarks/run.py --smoke`` (the CI bench-regress job does).
+Re-validates every benchmark artifact against its schema and fails the
+job when a performance ratio regresses below its floor:
+
+  * BENCH_tune.json  — schema ``repro.tune.report.validate_bench``;
+    tuned-vs-untuned speedup >= TUNE_SPEEDUP_FLOOR per cell (a tuned
+    pick must never lose to its own untuned baseline),
+  * BENCH_serve.json — schema ``repro.serve.report.validate_serve``;
+    continuous-vs-static throughput >= SERVE_SPEEDUP_FLOOR,
+  * BENCH_graph.json — fused-vs-unfused HBM ratio >= the floor recorded
+    in the document (``benchmarks.graph_fusion.HBM_RATIO_FLOOR``) and
+    bit parity with the explicit-schedule oracle.
+
+The emitting benchmarks enforce their own gates too; this checker is
+the belt to their suspenders — it catches a stale or hand-edited
+artifact and gives CI one uniform failure surface to report.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import sys
+
+ROOT = pathlib.Path(__file__).parent.parent
+
+TUNE_SPEEDUP_FLOOR = 1.0
+SERVE_SPEEDUP_FLOOR = 1.5
+
+
+def _load(name: str, problems: list) -> dict | None:
+    path = ROOT / name
+    if not path.exists():
+        problems.append(f"{name}: missing (did benchmarks/run.py run?)")
+        return None
+    try:
+        return json.loads(path.read_text())
+    except ValueError as e:
+        problems.append(f"{name}: unparseable ({e})")
+        return None
+
+
+def check(problems: list) -> None:
+    from repro.serve.report import validate_serve
+    from repro.tune.report import validate_bench
+
+    tune = _load("BENCH_tune.json", problems)
+    if tune is not None:
+        problems += [f"BENCH_tune.json: {p}" for p in validate_bench(tune)]
+        for cell in tune.get("cells", []):
+            sp = cell.get("speedup")
+            if isinstance(sp, (int, float)) and sp < TUNE_SPEEDUP_FLOOR:
+                problems.append(
+                    f"BENCH_tune.json: {cell.get('cell')} tuned/untuned "
+                    f"speedup {sp:.2f} < floor {TUNE_SPEEDUP_FLOOR}")
+
+    serve = _load("BENCH_serve.json", problems)
+    if serve is not None:
+        problems += [f"BENCH_serve.json: {p}" for p in
+                     validate_serve(serve)]
+        sp = serve.get("speedup")
+        if sp is not None and sp < SERVE_SPEEDUP_FLOOR:
+            problems.append(
+                f"BENCH_serve.json: continuous/static speedup {sp:.2f} "
+                f"< floor {SERVE_SPEEDUP_FLOOR}")
+
+    graph = _load("BENCH_graph.json", problems)
+    if graph is not None:
+        floor = graph.get("floor")
+        chains = graph.get("chains")
+        if not isinstance(floor, (int, float)) \
+                or not isinstance(chains, list) or not chains:
+            problems.append("BENCH_graph.json: needs numeric 'floor' and "
+                            "non-empty 'chains'")
+        else:
+            for row in chains:
+                ratio = row.get("hbm_ratio")
+                if not isinstance(ratio, (int, float)) or ratio < floor:
+                    problems.append(
+                        f"BENCH_graph.json: {row.get('shape')} hbm_ratio "
+                        f"{ratio} < floor {floor}")
+                if row.get("bit_parity") is not True:
+                    problems.append(
+                        f"BENCH_graph.json: {row.get('shape')} lost bit "
+                        f"parity vs the explicit-schedule oracle")
+
+
+def main() -> None:
+    problems: list = []
+    check(problems)
+    if problems:
+        print("bench-regress gates FAILED:", file=sys.stderr)
+        for p in problems:
+            print(f"  {p}", file=sys.stderr)
+        raise SystemExit(1)
+    print("bench-regress gates passed (tune schema+floor, serve "
+          "schema+floor, graph ratio+parity)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,6 +1,6 @@
 """Benchmark aggregator — one section per paper table/figure.
 
-    PYTHONPATH=src python -m benchmarks.run
+    PYTHONPATH=src python -m benchmarks.run [--smoke]
 
 Sections:
   fig5   — normalized dataflow performance per tensor algebra (cycle model)
@@ -12,11 +12,19 @@ Sections:
          calibrated cycle model, BENCH_tune.json emission
   serve  — continuous-batching vs static-batch serving load (open-loop,
          mixed lengths; parity + speedup gate, BENCH_serve.json emission)
+  graph  — fused vs unfused attention+MLP chain (HBM-bytes proxy floor +
+         bit parity vs the explicit-schedule oracle, BENCH_graph.json)
   table3 — MM throughput comparison (XLA baselines + TPU roofline projection)
   roofline — aggregated dry-run roofline table (if results/dryrun exists)
+
+``--smoke`` is the CI bench-regress entry point: same sections, smoke
+subsets everywhere, so the emitted BENCH_*.json artifacts stay cheap
+enough to regenerate on every PR (``benchmarks/check_regress.py``
+validates them and enforces the regression floors afterwards).
 """
 from __future__ import annotations
 
+import argparse
 import sys
 import time
 import traceback
@@ -28,7 +36,14 @@ def _section(title):
     print("=" * 72)
 
 
-def main() -> None:
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI subset: smoke flags for every section "
+                         "(the sections below already default to their "
+                         "smoke variants; the flag is the bench-regress "
+                         "contract and gates the graph section's size)")
+    args = ap.parse_args(argv)
     t0 = time.time()
     failures = []
 
@@ -88,6 +103,14 @@ def main() -> None:
         assert not problems, f"BENCH_serve.json invalid: {problems}"
     except Exception:
         failures.append("serve")
+        traceback.print_exc()
+
+    _section("Graph fusion — fused vs unfused attention+MLP chain")
+    try:
+        from benchmarks import graph_fusion
+        graph_fusion.main(["--smoke"] if args.smoke else [])
+    except Exception:
+        failures.append("graph")
         traceback.print_exc()
 
     _section("Table III — matmul throughput comparison")

@@ -15,21 +15,26 @@ lazy attribute hook below keeps ``import repro`` free of jax imports.
 """
 from typing import TYPE_CHECKING
 
-__all__ = ["Accelerator", "Sparsity", "generate", "search"]
+__all__ = ["Accelerator", "AlgebraGraph", "GraphNode", "Sparsity",
+           "generate", "search", "search_graph"]
 
 if TYPE_CHECKING:  # pragma: no cover - typing only
     from .api import Accelerator, generate
     from .core.algebra import Sparsity
-    from .core.dse import search
+    from .core.dse import search, search_graph
+    from .graph.ir import AlgebraGraph, GraphNode
 
 
 def __getattr__(name):
     if name in ("generate", "Accelerator"):
         from . import api
         return getattr(api, name)
-    if name == "search":
-        from .core.dse import search
-        return search
+    if name in ("search", "search_graph"):
+        from .core import dse
+        return getattr(dse, name)
+    if name in ("AlgebraGraph", "GraphNode"):
+        from .graph import ir
+        return getattr(ir, name)
     if name == "Sparsity":
         # pure-numpy descriptor: importable without dragging in jax
         from .core.algebra import Sparsity

@@ -305,8 +305,33 @@ def generate(alg: Union[TensorAlgebra, str],
       interpret: run Pallas in interpret mode; default: auto (True off-TPU
         so the same script runs on CPU and real hardware unchanged).
 
-    Returns an :class:`Accelerator`.
+    Returns an :class:`Accelerator` — or, when ``alg`` is an
+    :class:`~repro.graph.ir.AlgebraGraph`, a
+    :class:`~repro.graph.executor.GraphAccelerator`: the whole DAG is
+    planned (``repro.graph.planner``: epilogue folding, per-node
+    dataflow selection, inter-node tile agreement), every node lowers
+    through this same pipeline, and ``__call__`` runs the chain with at
+    most one HBM materialization per non-fusable edge.  For graphs,
+    ``search`` is the per-node DSE width (int) and ``dataflow`` /
+    ``tune`` / ``bounds`` / ``sparsity`` / ``mesh`` do not apply.
     """
+    from .graph.ir import AlgebraGraph as _AlgebraGraph
+    if isinstance(alg, _AlgebraGraph):
+        if dataflow is not None or tune or bounds or sparsity:
+            raise ValueError(
+                "graph generation plans per-node dataflows itself: "
+                "dataflow=/tune=/bounds=/sparsity= do not apply; use "
+                "search= for the per-node DSE width")
+        if search is not None and not isinstance(search, int):
+            raise ValueError("for a graph, search= must be an int "
+                             "(per-node DSE width)")
+        from .graph import executor as _graph_exec
+        if interpret is None:
+            interpret = jax.default_backend() != "tpu"
+        return _graph_exec.build(
+            alg, search=search, cfg=cfg, dtype=dtype,
+            interpret=interpret, backend=backend, validate=validate,
+            mesh=mesh)
     algebra = _resolve_algebra(alg, bounds)
     if sparsity:
         algebra = algebra.with_sparsity(**sparsity)

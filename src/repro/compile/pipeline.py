@@ -27,7 +27,7 @@ from __future__ import annotations
 import collections
 import dataclasses
 import threading
-from typing import Dict, Optional, Tuple
+from typing import Dict, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -40,6 +40,7 @@ from ..core.algebra import TensorAlgebra
 from ..core.costmodel import CostReport, PaperCycleModel
 from ..core.stt import Dataflow
 from ..core.tiling import ArrayConfig
+from ..kernels import epilogue as epilogue_mod
 from ..kernels import ops
 from .lowering import LoweredForm, lower_form
 
@@ -72,6 +73,16 @@ class CompiledKernel:
     #: pipeline's historic behavior
     grid_order: str = "default"
     accum: str = "auto"
+    #: epilogue ops fused into the kernel's output-block flush
+    #: (``kernels/epilogue.py``); () = plain algebra
+    epilogue: Tuple[str, ...] = ()
+    #: operand-dict key carrying the rank-1 bias vector a "bias" epilogue
+    #: op streams (not an algebra tensor; None when the epilogue has none)
+    bias_tensor: Optional[str] = None
+    #: identity of the fused graph group this kernel was lowered for
+    #: (``repro.graph``); part of the compile/tune cache key so a
+    #: block-constrained fused lowering never aliases the standalone one
+    fused_group: Optional[str] = None
     #: where the blocks/knobs came from: "analytical" (shared tile
     #: chooser) or "tuned" (measured-autotuning cache, repro.tune)
     source: str = "analytical"
@@ -137,6 +148,15 @@ class CompiledKernel:
         return cast
 
     def __call__(self, operands: Dict[str, jax.Array]) -> jax.Array:
+        bias = None
+        if self.bias_tensor is not None:
+            if self.bias_tensor not in operands:
+                raise ValueError(
+                    f"kernel has a fused bias epilogue: operands must "
+                    f"include {self.bias_tensor!r}")
+            operands = dict(operands)
+            bias = jnp.asarray(operands.pop(self.bias_tensor),
+                               jnp.float32)
         cast = self.cast_operands(operands)
         lhs, rhs = self.form.prepare(cast)
         bm, bn, bk = self.blocks
@@ -147,23 +167,42 @@ class CompiledKernel:
                 sp_arr, dense_arr, coords=sp.coords, block=sp.block,
                 bstream=bn if sp.side == "lhs" else bm, side=sp.side,
                 backend=self.backend, interpret=self.interpret)
+            if self.epilogue:
+                # the BSR grid has no epilogue flush point yet; apply on
+                # the full 2-D output (same math, one extra VMEM pass)
+                out2d = epilogue_mod.apply_epilogue(
+                    out2d.astype(jnp.float32), self.epilogue,
+                    bias=bias).astype(self.dtype)
         else:
             out2d = ops.stt_matmul(
                 lhs, rhs, template=self.template, stationary=self.stationary,
                 bm=bm, bn=bn, bk=bk, backend=self.backend,
                 interpret=self.interpret,
                 vmem_budget=self.cfg.vmem_budget_bytes,
-                grid_order=self.grid_order, accum=self.accum)
+                grid_order=self.grid_order, accum=self.accum,
+                epilogue=self.epilogue, bias=bias)
         return self.form.finish(out2d)
 
     def validate(self, seed: int = 0, atol: float = 1e-3) -> float:
         """Execute on random operands and compare against the loop-nest
-        oracle ``alg.reference``.  Returns the max abs error; raises on
+        oracle ``alg.reference`` (composed with the numpy epilogue mirror
+        when ops are fused).  Returns the max abs error; raises on
         mismatch.  Integer-valued operands make the fp32 path exact for
         every registry shape that fits the oracle."""
-        operands = self.algebra.random_operands(seed)
+        operands = dict(self.algebra.random_operands(seed))
+        bias = None
+        if self.bias_tensor is not None:
+            n_last = self.algebra.tensor_shape(self.algebra.output)[-1]
+            bias = np.random.default_rng(seed + 1).integers(
+                -4, 5, size=(n_last,)).astype(np.float64)
+            operands[self.bias_tensor] = bias
         got = np.asarray(self(operands), dtype=np.float64)
-        want = self.algebra.reference(operands).astype(np.float64)
+        want = self.algebra.reference(
+            {k: v for k, v in operands.items()
+             if k != self.bias_tensor}).astype(np.float64)
+        if self.epilogue:
+            want = epilogue_mod.apply_epilogue_np(want, self.epilogue,
+                                                  bias=bias)
         err = float(np.abs(got - want).max()) if got.size else 0.0
         if got.shape != want.shape or err > atol:
             raise AssertionError(
@@ -210,7 +249,10 @@ _STATS = {"hits": 0, "misses": 0, "evictions": 0}
 
 
 def _cache_key(alg: TensorAlgebra, df: Dataflow, cfg: ArrayConfig,
-               dtype, interpret: bool, backend: str) -> Tuple:
+               dtype, interpret: bool, backend: str,
+               epilogue: Tuple[str, ...] = (),
+               bias_tensor: Optional[str] = None,
+               fused_group: Optional[str] = None) -> Tuple:
     # alg is a frozen dataclass of tuples: it *is* the algebra signature
     # (name + loops + bounds/shapes + access matrices + sparsity), and the
     # LoweredForm — batch grid dims included — is a pure function of it,
@@ -219,9 +261,14 @@ def _cache_key(alg: TensorAlgebra, df: Dataflow, cfg: ArrayConfig,
     #
     # This tuple is also the identity the on-disk *tuning* cache hashes
     # (repro.tune.cache.key_for): a tuned variant applies exactly where
-    # the compiled kernel it was measured on would be reused.
+    # the compiled kernel it was measured on would be reused.  The
+    # epilogue spec and the fused-group id are part of that identity: an
+    # epilogue'd kernel computes a different function, and a fused-graph
+    # lowering constrains the block schedule — a variant tuned for the
+    # standalone algebra must not be replayed for either.
     return (alg, df.selected, df.T, df.signature, cfg,
-            jnp.dtype(dtype).name, interpret, backend)
+            jnp.dtype(dtype).name, interpret, backend,
+            tuple(epilogue), bias_tensor, fused_group)
 
 
 def _variant_key(key: Tuple, blocks, grid_order: str, accum: str) -> Tuple:
@@ -274,6 +321,28 @@ def _blocks_from_tile(alg: TensorAlgebra, df: Dataflow, form: LoweredForm,
     return tiling.form_blocks(alg, df, form, cfg.pe_dims)
 
 
+def _epilogue_legal_for_form(alg: TensorAlgebra, form: LoweredForm,
+                             epilogue: Tuple[str, ...]) -> Optional[str]:
+    """Why this epilogue cannot ride this lowered form (None = legal).
+
+    Elementwise ops commute with the finish reshape, so they are legal on
+    every form.  ``bias`` / ``softmax`` act along the last axis: they are
+    only legal when the finished tensor's last axis *is* the matmul n
+    axis (gemm's identity finish is the canonical case) — otherwise the
+    2-D in-kernel application and the finished-tensor semantics diverge.
+    """
+    rowwise = epilogue_mod.needs_bias(epilogue) \
+        or epilogue_mod.has_softmax(epilogue)
+    if not rowwise:
+        return None
+    out_shape = alg.tensor_shape(alg.output)
+    if form.batch or out_shape[-1] != form.n:
+        return (f"bias/softmax epilogue acts on the matmul n axis "
+                f"(n={form.n}) but the finished output {out_shape} of "
+                f"{alg.name} does not end with it")
+    return None
+
+
 def lower(alg: TensorAlgebra, df: Optional[Dataflow] = None, *,
           cfg: ArrayConfig = ArrayConfig(),
           dtype=jnp.float32, interpret: bool = False,
@@ -282,7 +351,10 @@ def lower(alg: TensorAlgebra, df: Optional[Dataflow] = None, *,
           blocks: Optional[Tuple[int, int, int]] = None,
           grid_order: Optional[str] = None,
           accum: Optional[str] = None,
-          tuned: Optional[bool] = None) -> CompiledKernel:
+          tuned: Optional[bool] = None,
+          epilogue: Sequence[str] = (),
+          bias_tensor: Optional[str] = None,
+          fused_group: Optional[str] = None) -> CompiledKernel:
     """Lower ``(algebra, dataflow)`` to an executable, cached kernel.
 
     ``validate=None`` (default) auto-validates against ``alg.reference``
@@ -295,13 +367,32 @@ def lower(alg: TensorAlgebra, df: Optional[Dataflow] = None, *,
     tuning cache (``repro.tune``) is consulted first — a persisted winner
     for this exact compile key replaces the analytical choice, which is
     how a ``repro.tune.tune()`` run keeps paying off in later processes.
+
+    ``epilogue`` fuses post-processing ops (``kernels/epilogue.py``) into
+    the kernel's output-block flush; a ``"bias"`` op names its extra
+    rank-1 operand via ``bias_tensor`` (the ``__call__`` dict key).
+    ``fused_group`` tags a lowering constrained by a fused graph
+    (``repro.graph``); all three enter the compile *and* tuning cache
+    keys, so standalone and fused variants never alias.
     """
     if df is None:
         df = default_dataflow(alg)
     if df.algebra_name != alg.name:
         raise ValueError(f"dataflow {df.name} was generated for algebra "
                          f"{df.algebra_name!r}, not {alg.name!r}")
-    key = _cache_key(alg, df, cfg, dtype, interpret, backend)
+    epilogue = epilogue_mod.validate_spec(epilogue)
+    if epilogue_mod.needs_bias(epilogue) and bias_tensor is None:
+        raise ValueError("epilogue with a 'bias' op needs bias_tensor= "
+                         "(the operand-dict key of the bias vector)")
+    if bias_tensor is not None and not epilogue_mod.needs_bias(epilogue):
+        raise ValueError("bias_tensor= given but the epilogue has no "
+                         "'bias' op")
+    if bias_tensor is not None and any(t.name == bias_tensor
+                                       for t in alg.tensors):
+        raise ValueError(f"bias_tensor {bias_tensor!r} collides with an "
+                         f"algebra tensor name")
+    key = _cache_key(alg, df, cfg, dtype, interpret, backend,
+                     epilogue, bias_tensor, fused_group)
     source, measured_s = "analytical", None
     if blocks is None and grid_order is None and accum is None \
             and tuned is not False:
@@ -337,14 +428,23 @@ def lower(alg: TensorAlgebra, df: Optional[Dataflow] = None, *,
     ep = plan_mod.plan_for(
         df, densities={name: alg.density_of(name) for name, _ in alg.sparsity})
     form = lower_form(alg)
+    if epilogue:
+        reason = _epilogue_legal_for_form(alg, form, epilogue)
+        if reason is not None:
+            raise ValueError(reason)
     if blocks is None:
         blocks = _blocks_from_tile(alg, df, form, cfg)
+    if epilogue_mod.has_softmax(epilogue) and blocks[1] != form.n:
+        # a row softmax needs the whole unpadded row in one block
+        blocks = (blocks[0], form.n, blocks[2])
     stationary = "A" if ep.kernel.resident_tensor in form.lhs_tensors \
         else "B"
     kernel = CompiledKernel(
         algebra=alg, dataflow=df, plan=ep, form=form, blocks=blocks,
         stationary=stationary, cfg=cfg, dtype=jnp.dtype(dtype),
         interpret=interpret, backend=backend,
+        epilogue=epilogue, bias_tensor=bias_tensor,
+        fused_group=fused_group,
         grid_order=grid_order, accum=accum, source=source,
         measured_s=measured_s)
     if validate or (validate is None

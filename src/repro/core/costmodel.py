@@ -362,6 +362,72 @@ class PaperCycleModel:
 
 
 # ---------------------------------------------------------------------------
+# Graph-level totals — fused vs unfused HBM accounting (repro.graph)
+# ---------------------------------------------------------------------------
+
+#: HBM <-> scratchpad bandwidth per 320 MHz cycle (≈32 GB/s, the paper's
+#: off-array link §VI-A): the denominator for the traffic every
+#: *materialized* graph edge pays and every fused edge saves
+HBM_BYTES_PER_CYCLE = 100.0
+
+
+@dataclasses.dataclass
+class GraphCostReport:
+    """Whole-graph cycle/byte totals for a planned :class:`AlgebraGraph`.
+
+    ``hbm_bytes`` charges each materialized edge one write plus one read
+    per unfused consumer (graph inputs are reads, the graph output a
+    write, an unfused epilogue a full round trip);
+    ``hbm_bytes_unfused`` re-prices the same plan with *every* fusion
+    disabled — the honest baseline ``dse.search_graph`` ranks against.
+    ``cycles`` = per-node compute cycles + HBM traffic cycles (+ mesh
+    reshard traffic over the inter-chip link when planned on a mesh).
+    """
+
+    node_cycles: Dict[str, float]
+    compute_cycles: float
+    edge_bytes: Dict[str, float]            # per-edge HBM bytes charged
+    hbm_bytes: float
+    hbm_bytes_unfused: float
+    fused_edges: Tuple[str, ...]            # "producer->consumer:edge"
+    materialized_edges: Tuple[Tuple[str, str], ...]   # (edge desc, why)
+    reshard_bytes: Dict[str, float] = dataclasses.field(
+        default_factory=dict)
+    mesh_shape: Optional[Tuple[int, int]] = None
+
+    @property
+    def saved_hbm_bytes(self) -> float:
+        return self.hbm_bytes_unfused - self.hbm_bytes
+
+    @property
+    def hbm_ratio(self) -> float:
+        """unfused / fused HBM traffic (>1 = fusion saves bytes)."""
+        return self.hbm_bytes_unfused / max(1.0, self.hbm_bytes)
+
+    @property
+    def hbm_cycles(self) -> float:
+        return self.hbm_bytes / HBM_BYTES_PER_CYCLE
+
+    @property
+    def reshard_cycles(self) -> float:
+        return sum(self.reshard_bytes.values()) / INTERCHIP_BYTES_PER_CYCLE
+
+    @property
+    def cycles(self) -> float:
+        return self.compute_cycles + self.hbm_cycles + self.reshard_cycles
+
+    @property
+    def cycles_unfused(self) -> float:
+        return (self.compute_cycles
+                + self.hbm_bytes_unfused / HBM_BYTES_PER_CYCLE
+                + self.reshard_cycles)
+
+    @property
+    def runtime_ms(self) -> float:
+        return self.cycles / 320e6 * 1e3
+
+
+# ---------------------------------------------------------------------------
 # Multi-chip pricing — collective cost terms from the PartitionSolution
 # ---------------------------------------------------------------------------
 

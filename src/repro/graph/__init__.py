@@ -1,0 +1,18 @@
+"""repro.graph — whole-graph accelerator generation.
+
+Lifts the front door from one :class:`~repro.core.algebra.TensorAlgebra`
+to a DAG of them (attention = gemm·softmax·gemm, MLP = gemm·gelu·gemm):
+
+* :mod:`repro.graph.ir`       — the :class:`AlgebraGraph` IR (nodes are
+  tensor algebras or elementwise epilogues, edges are tensors),
+* :mod:`repro.graph.planner`  — per-node dataflow selection with
+  inter-node tile/partition agreement + epilogue folding,
+* :mod:`repro.graph.executor` — the fused :class:`GraphAccelerator`
+  ``repro.generate(graph)`` returns.
+"""
+from .executor import GraphAccelerator
+from .ir import AlgebraGraph, GraphNode
+from .planner import GraphPlan, plan_graph
+
+__all__ = ["AlgebraGraph", "GraphNode", "GraphAccelerator", "GraphPlan",
+           "plan_graph"]

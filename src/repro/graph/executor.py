@@ -1,0 +1,156 @@
+"""GraphAccelerator — the fused executable ``repro.generate(graph)``
+returns.
+
+Realization note (documented deviation, same spirit as DESIGN.md D2):
+the generated artifact executes the planned graph as a sequence of
+Pallas kernel dispatches — a fused edge means the producer kernel was
+*scheduled* so its output block agrees with the consumer's input block
+(folded epilogue, whole-tensor or common-divisor tiles), and the cost
+model prices that edge at zero HBM traffic.  The JAX arrays that carry
+values between dispatches are XLA's realization of the VMEM residency
+the schedule guarantees; the HBM accounting in ``cost_report()`` is the
+model's (paper's) view of the same schedule.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Mapping, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..compile import pipeline
+from ..core.costmodel import GraphCostReport
+from ..kernels import epilogue as epilogue_mod
+from .ir import AlgebraGraph
+from .planner import GraphPlan, plan_graph
+
+
+def bias_operand_key(edge: str) -> str:
+    """Operand-dict key a fused bias vector rides under (prefixed so it
+    can never collide with an algebra tensor name)."""
+    return f"bias:{edge}"
+
+
+@dataclasses.dataclass
+class GraphAccelerator:
+    """Executable for a planned :class:`AlgebraGraph`.
+
+    ``__call__`` takes one array per graph input edge and returns the
+    graph output, running each planned node's compiled kernel once (a
+    diamond fan-out reuses the memoized edge value — producers are never
+    re-computed) with folded epilogues applied inside the kernels.
+    """
+
+    graph: AlgebraGraph
+    plan: GraphPlan
+    kernels: Dict[str, pipeline.CompiledKernel]
+    validated: bool = False
+
+    @property
+    def dtype(self) -> jnp.dtype:
+        return jnp.dtype(self.plan.dtype)
+
+    def __call__(self, operands: Mapping[str, jax.Array]) -> jax.Array:
+        missing = [e for e in self.graph.inputs if e not in operands]
+        if missing:
+            raise ValueError(f"missing graph input(s): {missing}")
+        values: Dict[str, jax.Array] = {
+            e: jnp.asarray(operands[e]) for e in self.graph.inputs}
+        folded = {n for p in self.plan.nodes.values() for n in p.folded}
+        for node in self.graph.topo_nodes:
+            if node.name in folded:
+                continue                 # runs inside its producer kernel
+            if node.algebra is not None:
+                p = self.plan.nodes[node.name]
+                kern = self.kernels[node.name]
+                ops = {t.name: values[e]
+                       for t, e in zip(node.algebra.inputs, node.inputs)}
+                if kern.bias_tensor is not None:
+                    ops[kern.bias_tensor] = values[p.bias_edge]
+                out = kern(ops)
+                if p.epilogue and not p.epilogue_fused:
+                    # legal-but-not-in-kernel spec: apply on the finished
+                    # tensor (the cost model charged the round trip)
+                    bias = None if p.bias_edge is None else \
+                        jnp.asarray(values[p.bias_edge], jnp.float32)
+                    out = epilogue_mod.apply_epilogue(
+                        out.astype(jnp.float32), p.epilogue,
+                        bias=bias).astype(kern.dtype)
+                values[p.result_edge] = out
+            else:
+                bias = None if len(node.inputs) == 1 else \
+                    jnp.asarray(values[node.inputs[1]], jnp.float32)
+                x = jnp.asarray(values[node.inputs[0]], jnp.float32)
+                values[node.output] = epilogue_mod.apply_epilogue(
+                    x, (node.op,), bias=bias).astype(self.dtype)
+        return values[self.graph.output]
+
+    def cost_report(self) -> GraphCostReport:
+        """Graph-level cycle/byte totals — fused edges priced at zero
+        HBM traffic, with the unfused baseline alongside."""
+        return self.plan.cost_report()
+
+    def validate(self, seed: int = 0, atol: float = 1e-3,
+                 rtol: float = 1e-5) -> float:
+        """Execute on random integer operands and compare against the
+        graph's float64 numpy oracle; returns max abs error, raises on
+        mismatch.  ``rtol`` scales with the output magnitude: a chain
+        compounds fp32 rounding multiplicatively where a single exact
+        integer gemm does not."""
+        operands = self.graph.random_operands(seed)
+        got = np.asarray(self(operands), dtype=np.float64)
+        want = np.asarray(self.graph.reference(operands), np.float64)
+        err = float(np.abs(got - want).max()) if got.size else 0.0
+        bound = atol + rtol * (float(np.abs(want).max()) if want.size
+                               else 0.0)
+        if got.shape != want.shape or err > bound:
+            raise AssertionError(
+                f"graph execution diverged from reference: shape "
+                f"{got.shape} vs {want.shape}, max err {err:.3e} "
+                f"(bound {bound:.3e})")
+        self.validated = True
+        return err
+
+    def describe(self) -> str:
+        return self.plan.describe()
+
+
+def build(graph: AlgebraGraph, *,
+          search: Optional[int] = None,
+          plan: Optional[GraphPlan] = None,
+          cfg=None, dtype=jnp.float32,
+          interpret: bool = False, backend: str = "pallas",
+          validate: Optional[bool] = None,
+          mesh=None) -> GraphAccelerator:
+    """Plan (unless a plan is given) and lower a graph to an executable.
+
+    Each node lowers through the one compile pipeline (``pipeline.lower``)
+    with the plan's agreed blocks, folded epilogue spec and fused-group
+    tag; an unconstrained node lowers with none of them and therefore
+    shares the standalone ``generate(alg)`` cache entry bit-for-bit.
+    """
+    if mesh is not None:
+        raise ValueError(
+            "graph execution on a mesh is not wired yet: pass mesh= to "
+            "plan_graph/search_graph for partition-agreement pricing, "
+            "and shard the per-node accelerators individually")
+    from ..core.costmodel import ArrayConfig
+    cfg = cfg if cfg is not None else ArrayConfig()
+    if plan is None:
+        plan = plan_graph(graph, search=search, cfg=cfg,
+                          dtype=jnp.dtype(dtype).name)
+    kernels: Dict[str, pipeline.CompiledKernel] = {}
+    for name, p in plan.nodes.items():
+        fused_ep = p.epilogue if p.epilogue_fused else ()
+        bias_key = bias_operand_key(p.bias_edge) \
+            if (fused_ep and p.bias_edge is not None
+                and epilogue_mod.needs_bias(fused_ep)) else None
+        kernels[name] = pipeline.lower(
+            p.node.algebra, p.dataflow, cfg=cfg, dtype=p.dtype,
+            interpret=interpret, backend=backend, validate=validate,
+            blocks=p.blocks if p.blocks_constrained else None,
+            epilogue=fused_ep, bias_tensor=bias_key,
+            fused_group=plan.fused_group_for(name))
+    return GraphAccelerator(graph=graph, plan=plan, kernels=kernels)

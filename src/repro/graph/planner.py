@@ -1,0 +1,522 @@
+"""Whole-graph planning: dataflow selection with inter-node agreement.
+
+``plan_graph`` turns a validated :class:`~repro.graph.ir.AlgebraGraph`
+into a :class:`GraphPlan` in four passes:
+
+1. **Epilogue folding** — a sole-consumer chain of epilogue nodes
+   hanging off an algebra node's output is folded into that node's
+   kernel epilogue spec (``kernels/epilogue.py``), so bias/activation/
+   softmax run on the fp32 output block inside the producing Pallas
+   kernel instead of as separate HBM round trips.  Folding stops at a
+   fan-out, a dtype change, or a spec the registry rejects; a folded
+   spec the *lowered form* rejects (row-wise op on a reshaped output)
+   still executes with the node but outside the kernel, and the cost
+   model charges it the round trip.
+
+2. **Per-node dataflow selection** — extends ``dse.search`` node by
+   node in topological order: each candidate dataflow is priced by its
+   own compute cycles *plus* the HBM traffic of the node's input edges,
+   where an edge that can fuse with its already-planned producer under
+   this candidate's template costs nothing.  A candidate that keeps a
+   producer's output VMEM-resident can therefore beat one with fewer
+   raw cycles — fused vs unfused is ranked honestly, per edge.
+
+3. **Tile agreement** — for every fusable algebra→algebra edge the
+   producer's output block schedule is made to match the consumer's
+   input block schedule: when the intermediate fits the VMEM residency
+   budget both sides get whole-tensor blocks (the producer flushes one
+   block, the consumer streams it as its full lhs — bit-exactly one
+   ``jnp.dot`` per node); otherwise the block sizes are narrowed to a
+   common divisor fixpoint.  On a mesh the producer's output partition
+   must also land on the same axes as the consumer's lhs partition
+   (``plan.solve_partition``) or the edge is demoted to a resharded
+   materialization charged at the inter-chip link.
+
+4. **Edge pricing** — every edge decision becomes bytes in a
+   :class:`~repro.core.costmodel.GraphCostReport`: materialized edges
+   pay a write plus a read per unfused consumer, fused edges pay
+   nothing, and the same plan re-priced with fusion disabled gives the
+   ``hbm_bytes_unfused`` baseline.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from ..compile import pipeline
+from ..compile.lowering import LoweredForm, lower_form
+from ..core import plan as plan_mod, tiling
+from ..core.costmodel import (ArrayConfig, CostReport, GraphCostReport,
+                              HBM_BYTES_PER_CYCLE, PaperCycleModel)
+from ..core.stt import Dataflow
+from ..kernels import epilogue as epilogue_mod
+from .ir import AlgebraGraph, GraphNode
+
+
+def _vmem_resident_limit(cfg: ArrayConfig) -> int:
+    """fp32 bytes an intermediate may occupy and still be scheduled as a
+    single whole-tensor block (VMEM-resident between producer flush and
+    consumer stream).  1/8 of the budget leaves room for the producer's
+    operand blocks and the consumer's accumulator alongside it."""
+    return cfg.vmem_budget_bytes // 8
+
+
+@dataclasses.dataclass
+class NodePlan:
+    """The planned schedule of one algebra node (epilogues folded in)."""
+
+    node: GraphNode
+    dataflow: Dataflow
+    report: CostReport
+    form: LoweredForm
+    template: str
+    blocks: Tuple[int, int, int]
+    blocks_constrained: bool            # True: agreement overrode chooser
+    epilogue: Tuple[str, ...]           # folded epilogue spec
+    bias_edge: Optional[str]            # graph edge feeding the bias op
+    epilogue_fused: bool                # spec runs inside the kernel
+    folded: Tuple[str, ...]             # epilogue node names folded here
+    result_edge: str                    # edge this node's execution yields
+    dtype: str
+
+
+@dataclasses.dataclass
+class EdgeDecision:
+    """Fuse-or-materialize verdict for one consumed edge instance."""
+
+    edge: str
+    producer: Optional[str]             # planned algebra node name, or None
+    consumer: str
+    fused: bool
+    reason: str                         # why not fused ("" when fused)
+    bytes_hbm: float                    # read bytes this consumer pays
+    reshard_bytes: float = 0.0          # inter-chip bytes (mesh mismatch)
+
+
+@dataclasses.dataclass
+class GraphPlan:
+    """plan_graph's result: per-node schedules + per-edge verdicts."""
+
+    graph: AlgebraGraph
+    cfg: ArrayConfig
+    dtype: str
+    nodes: Dict[str, NodePlan]          # algebra node name -> plan (topo)
+    edges: List[EdgeDecision]
+    group: str                          # fused-group id for cache keys
+    mesh_shape: Optional[Tuple[int, int]] = None
+    axes: Tuple[str, str] = ("x", "y")
+
+    @property
+    def order(self) -> Tuple[str, ...]:
+        return tuple(self.nodes)
+
+    def node_plan_for_edge(self, edge: str) -> Optional[NodePlan]:
+        for np_ in self.nodes.values():
+            if np_.result_edge == edge:
+                return np_
+        return None
+
+    def fused_group_for(self, name: str) -> Optional[str]:
+        """The ``fused_group`` cache-key tag for one node's lowering —
+        None when the node is entirely unconstrained by the graph, so a
+        single-node graph shares the standalone ``lower(alg)`` entry."""
+        p = self.nodes[name]
+        if p.blocks_constrained or p.epilogue:
+            return self.group
+        return None
+
+    def cost_report(self) -> GraphCostReport:
+        return _price(self)
+
+    def describe(self) -> str:
+        rep = self.cost_report()
+        lines = [f"GraphPlan(group={self.group!r}, dtype={self.dtype}, "
+                 f"mesh={self.mesh_shape})"]
+        for name, p in self.nodes.items():
+            ep = f" epilogue={list(p.epilogue)}" \
+                 f"{'' if p.epilogue_fused else ' (unfused)'}" \
+                if p.epilogue else ""
+            lines.append(
+                f"  {name}: {p.node.algebra.name} df={p.dataflow.name} "
+                f"template={p.template} blocks={p.blocks}{ep} "
+                f"-> {p.result_edge}")
+        for e in self.edges:
+            if e.producer is None:
+                continue
+            verdict = "fused" if e.fused else f"HBM ({e.reason})"
+            lines.append(f"  edge {e.producer}->{e.consumer} "
+                         f"[{e.edge}]: {verdict}")
+        lines.append(
+            f"  hbm_bytes={rep.hbm_bytes:.0f} "
+            f"unfused={rep.hbm_bytes_unfused:.0f} "
+            f"saved={rep.saved_hbm_bytes:.0f} "
+            f"cycles={rep.cycles:.0f}")
+        return "\n".join(lines)
+
+
+# ---------------------------------------------------------------------------
+# Pass 1 — epilogue folding
+# ---------------------------------------------------------------------------
+
+def _fold_epilogues(graph: AlgebraGraph) -> Dict[str, dict]:
+    """For each algebra node, walk the sole-consumer epilogue chain off
+    its output and fold it; returns per-node folding records."""
+    out: Dict[str, dict] = {}
+    for node in graph.topo_nodes:
+        if node.algebra is None:
+            continue
+        spec: List[str] = []
+        bias_edge: Optional[str] = None
+        folded: List[str] = []
+        edge = node.output
+        while True:
+            consumers = graph.consumers_of(edge)
+            if len(consumers) != 1 or edge == graph.output:
+                break
+            c = consumers[0]
+            if c.algebra is not None or c.inputs[0] != edge:
+                break                       # algebra consumer / bias feed
+            if (c.dtype or None) != (node.dtype or None):
+                break                       # dtype change: materialize
+            try:
+                epilogue_mod.validate_spec(tuple(spec) + (c.op,))
+            except ValueError:
+                break                       # e.g. a second bias op
+            spec.append(c.op)
+            if epilogue_mod.parse_op(c.op)[0] == "bias":
+                bias_edge = c.inputs[1]
+            folded.append(c.name)
+            edge = c.output
+        out[node.name] = dict(epilogue=tuple(spec), bias_edge=bias_edge,
+                              folded=tuple(folded), result_edge=edge)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Fusability — producer side, consumer side, partition agreement
+# ---------------------------------------------------------------------------
+
+def _producer_fusable(p: NodePlan) -> Optional[str]:
+    """Why this node's output cannot stay on-chip for a consumer
+    (None = eligible).  The output must be the 2-D identity-finished
+    (m, n) matmul image, and any folded epilogue must run in-kernel —
+    an outside-the-kernel epilogue has already materialized it."""
+    alg = p.node.algebra
+    out_shape = alg.tensor_shape(alg.output)
+    if p.form.batch:
+        return "producer lowering is batched"
+    if out_shape != (p.form.m, p.form.n):
+        return (f"producer finish reshapes {(p.form.m, p.form.n)} "
+                f"-> {out_shape}")
+    if p.epilogue and not p.epilogue_fused:
+        return "producer epilogue applies outside the kernel"
+    return None
+
+
+def _consumer_fusable(node: GraphNode, edge: str) -> Optional[str]:
+    """Why this consumer cannot stream ``edge`` from VMEM (None = it
+    can).  Only a gemm's A operand maps identically onto the kernel lhs
+    (``prepare`` transposes B and mixes mttkrp/ttmc rhs factors)."""
+    alg = node.algebra
+    pos = node.inputs.index(edge)
+    tname = alg.inputs[pos].name
+    if alg.name != "gemm":
+        return f"consumer {alg.name} prepares its operands (non-identity)"
+    if tname != "A":
+        return f"consumer stores {tname} transposed (prepare is B.T)"
+    return None
+
+
+def _edge_fuse_reason(p: NodePlan, c_node: GraphNode, c_dtype: str,
+                      c_template: str, edge: str,
+                      graph: AlgebraGraph, cfg: ArrayConfig
+                      ) -> Optional[str]:
+    """Full single-chip fusability verdict for producer-plan -> consumer
+    (None = fusable).  Template constraint: a reduction-tree consumer
+    streams full-k blocks, so the intermediate must fit the VMEM
+    residency budget to agree with the producer's flush."""
+    why = _producer_fusable(p)
+    if why is not None:
+        return why
+    why = _consumer_fusable(c_node, edge)
+    if why is not None:
+        return why
+    if p.dtype != c_dtype:
+        return f"dtype changes {p.dtype} -> {c_dtype} across the edge"
+    shape = graph.edge_shape(edge)
+    nbytes = 4 * int(np.prod(shape))
+    if c_template == "reduction_tree" \
+            and nbytes > _vmem_resident_limit(cfg):
+        return (f"consumer reduction-tree needs the full {shape} "
+                f"intermediate resident ({nbytes}B > budget)")
+    return None
+
+
+def _solve(p_or_df: Dataflow, form: LoweredForm, axes, shape):
+    return plan_mod.solve_partition(
+        plan_mod.comm_plan_for(p_or_df, axes), form, axes=axes, shape=shape)
+
+
+def _partition_agrees(p: NodePlan, c_df: Dataflow, c_form: LoweredForm,
+                      axes: Tuple[str, str], shape: Tuple[int, int]
+                      ) -> Optional[str]:
+    """Mesh agreement: the producer's out shards must land where the
+    consumer's lhs expects them (edge m <-> lhs m, edge n <-> lhs k),
+    else the edge pays an inter-chip reshard (None = agrees)."""
+    sol_p = _solve(p.dataflow, p.form, axes, shape)
+    sol_c = _solve(c_df, c_form, axes, shape)
+    out_ax = sol_p.out.axis_of
+    lhs_ax = sol_c.lhs.axis_of
+    pairs = (("m", "m"), ("n", "k"))
+    for pd, cd in pairs:
+        if out_ax.get(pd) != lhs_ax.get(cd):
+            return (f"partition mismatch: producer out {pd}="
+                    f"{out_ax.get(pd)!r} vs consumer lhs {cd}="
+                    f"{lhs_ax.get(cd)!r}")
+    return None
+
+
+# ---------------------------------------------------------------------------
+# Pass 3 — tile agreement
+# ---------------------------------------------------------------------------
+
+def _agree_blocks(plans: Dict[str, NodePlan], fused: List[EdgeDecision],
+                  graph: AlgebraGraph, cfg: ArrayConfig) -> None:
+    """Make producer output blocks match consumer lhs blocks on every
+    fused edge (fixpoint: agreement on one edge can narrow another)."""
+    limit = _vmem_resident_limit(cfg)
+    for _ in range(1 + len(fused)):
+        changed = False
+        for e in fused:
+            p, c = plans[e.producer], plans[e.consumer]
+            m_e, n_e = graph.edge_shape(e.edge)
+            bn_c = c.blocks[1]
+            if 4 * m_e * n_e <= limit:
+                bm, bn = m_e, n_e       # whole tensor: one resident block
+                if 4 * m_e * c.form.n <= limit:
+                    # consumer accumulator fits too: single-dot schedule
+                    # (bit-identical to the oracle's one jnp.dot)
+                    bn_c = c.form.n
+            else:
+                bm = math.gcd(math.gcd(p.blocks[0], c.blocks[0]), m_e)
+                bn = math.gcd(math.gcd(p.blocks[1], c.blocks[2]), n_e)
+            new_p = (bm, bn, p.blocks[2])
+            new_c = (bm, bn_c, bn)
+            if new_p != p.blocks:
+                p.blocks, p.blocks_constrained, changed = new_p, True, True
+            if new_c != c.blocks:
+                c.blocks, c.blocks_constrained, changed = new_c, True, True
+        if not changed:
+            return
+    raise RuntimeError("tile agreement did not converge")   # pragma: no cover
+
+
+# ---------------------------------------------------------------------------
+# Pass 4 — pricing
+# ---------------------------------------------------------------------------
+
+def _elem_bytes(dtype: str) -> int:
+    return int(np.dtype(dtype if dtype != "bfloat16" else "float16"
+                        ).itemsize)
+
+
+def _price(plan: GraphPlan, assume_unfused: bool = False
+           ) -> GraphCostReport:
+    graph, cfg = plan.graph, plan.cfg
+    edge_bytes: Dict[str, float] = {}
+    reshard: Dict[str, float] = {}
+
+    def size_bytes(edge: str, dtype: str) -> float:
+        return float(np.prod(graph.edge_shape(edge))) * _elem_bytes(dtype)
+
+    def charge(edge: str, b: float) -> None:
+        edge_bytes[edge] = edge_bytes.get(edge, 0.0) + b
+
+    fused_edges: List[str] = []
+    materialized: List[Tuple[str, str]] = []
+    # reads: one per consumed edge instance unless the edge fuses
+    for e in plan.edges:
+        dtype = plan.nodes[e.consumer].dtype if e.consumer in plan.nodes \
+            else plan.dtype
+        if e.fused and not assume_unfused:
+            fused_edges.append(f"{e.producer}->{e.consumer}:{e.edge}")
+            continue
+        charge(e.edge, size_bytes(e.edge, dtype))
+        if e.producer is not None:
+            why = e.reason or ("fusion disabled" if assume_unfused
+                               else "")
+            materialized.append((f"{e.producer}->{e.consumer}:{e.edge}",
+                                 why))
+        if e.reshard_bytes and not assume_unfused:
+            reshard[e.edge] = reshard.get(e.edge, 0.0) + e.reshard_bytes
+    # writes: a produced edge hits HBM unless every consumer fused it
+    for name, p in plan.nodes.items():
+        consumers = [e for e in plan.edges if e.producer == name]
+        all_fused = consumers and all(e.fused for e in consumers) \
+            and not assume_unfused
+        if p.result_edge == graph.output or not all_fused:
+            charge(p.result_edge, size_bytes(p.result_edge, p.dtype))
+        if p.epilogue and (assume_unfused or not p.epilogue_fused):
+            # outside-the-kernel epilogue: one extra round trip
+            charge(p.result_edge, 2 * size_bytes(p.result_edge, p.dtype))
+    # standalone epilogue nodes (never folded): read + write round trip;
+    # their *input* read is already charged via plan.edges
+    folded = {n for p in plan.nodes.values() for n in p.folded}
+    for node in graph.topo_nodes:
+        if node.algebra is None and node.name not in folded:
+            charge(node.output, size_bytes(node.output, plan.dtype))
+
+    node_cycles = {n: p.report.cycles for n, p in plan.nodes.items()}
+    compute = sum(node_cycles.values())
+    hbm = sum(edge_bytes.values())
+    if assume_unfused:
+        unfused = hbm
+    else:
+        unfused = _price(plan, assume_unfused=True).hbm_bytes_unfused
+    return GraphCostReport(
+        node_cycles=node_cycles, compute_cycles=compute,
+        edge_bytes=edge_bytes, hbm_bytes=hbm, hbm_bytes_unfused=unfused,
+        fused_edges=tuple(fused_edges),
+        materialized_edges=tuple(materialized),
+        reshard_bytes=reshard, mesh_shape=plan.mesh_shape)
+
+
+# ---------------------------------------------------------------------------
+# Entry point
+# ---------------------------------------------------------------------------
+
+def plan_graph(graph: AlgebraGraph, *,
+               search: Optional[int] = None,
+               cfg: ArrayConfig = ArrayConfig(),
+               dtype: str = "float32",
+               mesh=None,
+               axes: Tuple[str, str] = ("x", "y")) -> GraphPlan:
+    """Plan a graph: fold epilogues, pick per-node dataflows, agree
+    tiles/partitions across fusable edges, price every edge.
+
+    ``search=None`` uses the default output-stationary schedule per
+    node; ``search=k`` runs the per-node DSE over the top-k candidates
+    of ``dse.search``, ranking each candidate by its compute cycles plus
+    the HBM traffic its input edges would actually pay (fused = free).
+    ``mesh`` (a Mesh or (rows, cols)) adds the partition-agreement
+    constraint and prices disagreeing edges as inter-chip reshards.
+    """
+    from ..core import dse
+
+    mesh_shape = None if mesh is None else dse._mesh_shape(mesh)
+    folds = _fold_epilogues(graph)
+    model = PaperCycleModel(cfg)
+    group = "g:" + "|".join(n.name for n in graph.topo_nodes) \
+        + "->" + graph.output
+
+    plans: "Dict[str, NodePlan]" = {}
+    result_owner: Dict[str, str] = {}   # result edge -> planned node name
+    decisions: List[EdgeDecision] = []
+
+    for node in graph.topo_nodes:
+        if node.algebra is None:
+            continue
+        alg = node.algebra
+        fold = folds[node.name]
+        node_dtype = node.dtype or dtype
+        form = lower_form(alg)
+        epilogue = fold["epilogue"]
+        ep_reason = pipeline._epilogue_legal_for_form(alg, form, epilogue) \
+            if epilogue else None
+        epilogue_fused = bool(epilogue) and ep_reason is None
+
+        if search:
+            candidates = dse.search(alg, top_k=search, cfg=cfg)
+        else:
+            df0 = pipeline.default_dataflow(alg)
+            candidates = [(model.evaluate(alg, df0), df0)]
+
+        best = None
+        for rep, df in candidates:
+            template = plan_mod.kernel_plan_for(df).template
+            extra = 0.0
+            for pos, edge in enumerate(node.inputs):
+                owner = result_owner.get(edge)
+                if owner is None:
+                    continue
+                why = _edge_fuse_reason(plans[owner], node, node_dtype,
+                                        template, edge, graph, cfg)
+                if why is None and mesh_shape is not None:
+                    why = _partition_agrees(plans[owner], df, form,
+                                            axes, mesh_shape)
+                if why is not None:
+                    shape = graph.edge_shape(edge)
+                    extra += (float(np.prod(shape))
+                              * _elem_bytes(node_dtype)
+                              / HBM_BYTES_PER_CYCLE)
+            score = rep.cycles + extra
+            if best is None or score < best[0]:
+                best = (score, rep, df, template)
+        _, rep, df, template = best
+
+        blocks = tiling.form_blocks(alg, df, form, cfg.pe_dims)
+        if epilogue_fused and epilogue_mod.has_softmax(epilogue):
+            blocks = (blocks[0], form.n, blocks[2])
+        p = NodePlan(
+            node=node, dataflow=df, report=rep, form=form,
+            template=template, blocks=blocks, blocks_constrained=False,
+            epilogue=epilogue, bias_edge=fold["bias_edge"],
+            epilogue_fused=epilogue_fused, folded=fold["folded"],
+            result_edge=fold["result_edge"], dtype=node_dtype)
+        plans[node.name] = p
+        result_owner[p.result_edge] = node.name
+
+        # decide each input edge against its (already planned) producer
+        for pos, edge in enumerate(node.inputs):
+            owner = result_owner.get(edge)
+            if owner is None or owner == node.name:
+                decisions.append(EdgeDecision(
+                    edge=edge, producer=None, consumer=node.name,
+                    fused=False, reason="graph input",
+                    bytes_hbm=float(np.prod(graph.edge_shape(edge)))
+                    * _elem_bytes(node_dtype)))
+                continue
+            why = _edge_fuse_reason(plans[owner], node, node_dtype,
+                                    template, edge, graph, cfg)
+            reshard_b = 0.0
+            if why is None and mesh_shape is not None:
+                why = _partition_agrees(plans[owner], df, form,
+                                        axes, mesh_shape)
+                if why is not None:
+                    reshard_b = float(np.prod(graph.edge_shape(edge))) \
+                        * _elem_bytes(node_dtype)
+            nbytes = 0.0 if why is None \
+                else float(np.prod(graph.edge_shape(edge))) \
+                * _elem_bytes(node_dtype)
+            decisions.append(EdgeDecision(
+                edge=edge, producer=owner, consumer=node.name,
+                fused=why is None, reason=why or "", bytes_hbm=nbytes,
+                reshard_bytes=reshard_b))
+        if fold["bias_edge"] is not None:
+            decisions.append(EdgeDecision(
+                edge=fold["bias_edge"], producer=None,
+                consumer=node.name, fused=False, reason="graph input",
+                bytes_hbm=float(np.prod(
+                    graph.edge_shape(fold["bias_edge"])))
+                * _elem_bytes(node_dtype)))
+
+    # standalone (unfolded) epilogue nodes read their tensor input too
+    folded_names = {n for p in plans.values() for n in p.folded}
+    for node in graph.topo_nodes:
+        if node.algebra is None and node.name not in folded_names:
+            for e in node.inputs:
+                decisions.append(EdgeDecision(
+                    edge=e, producer=result_owner.get(e),
+                    consumer=node.name, fused=False,
+                    reason="standalone epilogue node",
+                    bytes_hbm=float(np.prod(graph.edge_shape(e)))
+                    * _elem_bytes(dtype)))
+
+    plan = GraphPlan(graph=graph, cfg=cfg, dtype=dtype, nodes=plans,
+                     edges=decisions, group=group, mesh_shape=mesh_shape,
+                     axes=axes)
+    _agree_blocks(plans, [e for e in decisions if e.fused], graph, cfg)
+    return plan

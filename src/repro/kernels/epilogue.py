@@ -1,0 +1,163 @@
+"""Epilogue ops fused into the GEMM templates' output-block flush.
+
+An *epilogue* is an ordered tuple of op strings applied to a kernel's
+fp32 output block right before it is cast and written back — the
+TensorLib analogue of folding a post-processing module onto the PE
+array's drain path, and the fusion primitive `repro.graph` uses to
+collapse ``gemm -> activation`` chains into one Pallas kernel (no HBM
+round-trip for the intermediate).
+
+Spec grammar (hashable, jit-static-argument friendly)::
+
+    ("scale:0.125", "softmax")       # attention score epilogue
+    ("bias", "gelu")                 # MLP hidden epilogue
+
+* ``scale:<float>`` — multiply by a compile-time constant,
+* ``bias``          — add a rank-1 bias over the last (n) axis; the
+  templates stream the bias vector as an extra blocked operand,
+* unary activations — ``relu`` / ``gelu`` / ``silu`` / ``tanh`` /
+  ``exp``,
+* ``softmax``       — row softmax over the last axis.  Only legal when
+  one output block spans the *entire unpadded* n extent (``bn == n``):
+  a partial row cannot be normalized block-locally.  ``ops.stt_matmul``
+  enforces this.
+
+Semantics: every op acts on the **2-D matmul output** ``(m, n)`` before
+``LoweredForm.finish``.  For forms whose finish is a pure reshape that
+keeps the last tensor axis equal to ``n`` (gemm is the canonical case)
+this coincides with acting on the finished tensor — the graph layer's
+fusion-legality check (`repro.graph.planner`) only fuses when the two
+views agree, and otherwise applies the epilogue unfused on the finished
+tensor.
+
+``apply_epilogue`` is pure jnp so the same function runs inside a
+Pallas kernel body (on a VMEM block) and outside (on a full array — the
+unfused fallback and the oracle); ``apply_epilogue_np`` mirrors it in
+numpy for ``AlgebraGraph.reference``.
+"""
+from __future__ import annotations
+
+import math
+from typing import Iterable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+#: an ordered, hashable epilogue: tuple of op strings
+EpilogueSpec = Tuple[str, ...]
+
+
+def _softmax(x):
+    m = jnp.max(x, axis=-1, keepdims=True)
+    e = jnp.exp(x - m)
+    return e / jnp.sum(e, axis=-1, keepdims=True)
+
+
+_UNARY = {
+    "relu": lambda x: jnp.maximum(x, jnp.zeros((), x.dtype)),
+    "gelu": lambda x: jax.nn.gelu(x, approximate=True),
+    "silu": lambda x: x * jax.nn.sigmoid(x),
+    "tanh": jnp.tanh,
+    "exp": jnp.exp,
+    "softmax": _softmax,
+}
+
+
+def parse_op(op: str) -> Tuple[str, Optional[float]]:
+    """``"name"`` or ``"name:param"`` -> (name, param).  Raises on ops
+    outside the registry (the spec doubles as a cache-key component, so
+    unknown strings must fail loudly, not silently no-op)."""
+    name, _, param = op.partition(":")
+    if name == "scale":
+        try:
+            return name, float(param)
+        except ValueError:
+            raise ValueError(f"scale epilogue needs a float parameter, "
+                             f"got {op!r}") from None
+    if param:
+        raise ValueError(f"epilogue op {name!r} takes no parameter "
+                         f"(got {op!r})")
+    if name == "bias" or name in _UNARY:
+        return name, None
+    raise ValueError(f"unknown epilogue op {op!r}; known: "
+                     f"{sorted(_UNARY) + ['bias', 'scale:<f>']}")
+
+
+def validate_spec(spec: Iterable[str]) -> EpilogueSpec:
+    """Normalize to a tuple and validate every op; at most one ``bias``
+    (the templates stream exactly one bias operand)."""
+    out = tuple(spec)
+    for op in out:
+        parse_op(op)
+    if sum(1 for op in out if op == "bias") > 1:
+        raise ValueError(f"epilogue {out} has more than one 'bias' op")
+    return out
+
+
+def needs_bias(spec: Iterable[str]) -> bool:
+    return "bias" in tuple(spec)
+
+
+def has_softmax(spec: Iterable[str]) -> bool:
+    return "softmax" in tuple(spec)
+
+
+def apply_epilogue(x: jax.Array, spec: Iterable[str], *,
+                   bias: Optional[jax.Array] = None) -> jax.Array:
+    """Apply the spec to ``x`` (last axis = n).  Pure jnp: callable on a
+    VMEM block inside a Pallas kernel and on a full array outside."""
+    for op in spec:
+        name, param = parse_op(op)
+        if name == "scale":
+            x = x * jnp.asarray(param, dtype=x.dtype)
+        elif name == "bias":
+            if bias is None:
+                raise ValueError("epilogue 'bias' needs a bias operand")
+            x = x + bias.astype(x.dtype)
+        else:
+            x = _UNARY[name](x)
+    return x
+
+
+# ---------------------------------------------------------------------------
+# numpy mirror — the graph oracle's epilogue reference
+# ---------------------------------------------------------------------------
+
+def _np_gelu(x):
+    # jax.nn.gelu(approximate=True): tanh approximation
+    c = math.sqrt(2.0 / math.pi)
+    return 0.5 * x * (1.0 + np.tanh(c * (x + 0.044715 * x ** 3)))
+
+
+def _np_softmax(x):
+    m = np.max(x, axis=-1, keepdims=True)
+    e = np.exp(x - m)
+    return e / np.sum(e, axis=-1, keepdims=True)
+
+
+_UNARY_NP = {
+    "relu": lambda x: np.maximum(x, 0.0),
+    "gelu": _np_gelu,
+    "silu": lambda x: x / (1.0 + np.exp(-x)),
+    "tanh": np.tanh,
+    "exp": np.exp,
+    "softmax": _np_softmax,
+}
+
+
+def apply_epilogue_np(x: np.ndarray, spec: Iterable[str], *,
+                      bias: Optional[np.ndarray] = None) -> np.ndarray:
+    """numpy mirror of :func:`apply_epilogue` (fp64-friendly oracle)."""
+    x = np.asarray(x, dtype=np.float64)
+    for op in spec:
+        name, param = parse_op(op)
+        if name == "scale":
+            x = x * param
+        elif name == "bias":
+            if bias is None:
+                raise ValueError("epilogue 'bias' needs a bias operand")
+            x = x + np.asarray(bias, dtype=np.float64)
+        else:
+            x = _UNARY_NP[name](x)
+    return x

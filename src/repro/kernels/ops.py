@@ -15,6 +15,7 @@ import jax.numpy as jnp
 
 from ..core.plan import KernelPlan
 from . import bsr_gemm as _bsr
+from . import epilogue as _ep
 from . import flash_attention as _fa
 from . import ref as _ref
 from . import ssd_scan as _ssd
@@ -59,13 +60,15 @@ def _rt_order(grid_order: str) -> str:
 
 @functools.partial(jax.jit, static_argnames=(
     "template", "stationary", "bm", "bn", "bk", "backend", "interpret",
-    "vmem_budget", "grid_order", "accum"))
+    "vmem_budget", "grid_order", "accum", "epilogue"))
 def stt_matmul(a: jax.Array, b: jax.Array, *, template: str = "output_stationary",
                stationary: str = "B", bm: int = 128, bn: int = 128,
                bk: int = 128, backend: str = "pallas",
                interpret: bool = False,
                vmem_budget: Optional[int] = _gemm.DEFAULT_VMEM_BUDGET,
-               grid_order: str = "default", accum: str = "auto"
+               grid_order: str = "default", accum: str = "auto",
+               epilogue: tuple = (),
+               bias: Optional[jax.Array] = None
                ) -> jax.Array:
     """C = A @ B with the Pallas template selected by an STT dataflow.
 
@@ -87,14 +90,38 @@ def stt_matmul(a: jax.Array, b: jax.Array, *, template: str = "output_stationary
     (``resolve_accum``).  The operand-stationary template has its own
     fixed streaming order, so the knobs apply to it only after the VMEM
     fallback reroutes to the output-stationary template.
+
+    ``epilogue`` is a static tuple of post-processing ops
+    (``kernels/epilogue.py``) fused into the template's output-block
+    flush; ``bias`` is the extra rank-1 operand a ``"bias"`` op streams.
+    A ``"softmax"`` op needs one block spanning the whole unpadded row
+    (``bn >= n``) — a partial or padded row cannot be normalized
+    block-locally — so the call raises instead of silently computing a
+    wrong softmax; the graph planner treats that as fusion illegality
+    and applies the epilogue outside the kernel.
     """
+    epilogue = _ep.validate_spec(epilogue)
     if backend == "xla":
-        return _ref.matmul_ref(a, b)
+        out = _ref.matmul_ref(a, b, out_dtype=jnp.float32)
+        if epilogue:
+            out = _ep.apply_epilogue(out, epilogue, bias=bias)
+        return out.astype(a.dtype)
     m, k = a.shape[-2:]
     n = b.shape[-1]
     bm, bn, bk = min(bm, m), min(bn, n), min(bk, k)
+    if _ep.has_softmax(epilogue) and (bn != n or n % bn):
+        raise ValueError(
+            f"softmax epilogue needs one unpadded output block covering "
+            f"the full row: bn >= n and n % bn == 0 (got bn={bn}, n={n})")
     ap = _pad_to(a, (1,) * (a.ndim - 2) + (bm, bk))
     bp = _pad_to(b, (1,) * (b.ndim - 2) + (bk, bn))
+    if bias is not None:
+        # padded n columns get bias 0 and are sliced off below
+        bias = _pad_to(jnp.asarray(bias), (bn,))
+    if epilogue and template == "operand_stationary" and stationary == "A":
+        # the input-stationary realization transposes m/n (stt_gemm), so
+        # a last-axis epilogue cannot ride it; same math, other template
+        template = "output_stationary"
     if template == "operand_stationary" and vmem_budget is not None:
         # the strip extent follows the *streamed-output* dimension of one
         # batch slice: M for stationary B, N for stationary A
@@ -104,7 +131,8 @@ def stt_matmul(a: jax.Array, b: jax.Array, *, template: str = "output_stationary
         if _gemm.operand_stationary_strip_bytes(strip_len, strip_bn) \
                 > vmem_budget:
             template = "output_stationary"
-    kw = dict(bm=bm, bn=bn, bk=bk, interpret=interpret)
+    kw = dict(bm=bm, bn=bn, bk=bk, interpret=interpret,
+              epilogue=epilogue, bias=bias)
     if template == "output_stationary":
         out = _gemm.matmul_output_stationary(
             ap, bp, grid_order=grid_order,

@@ -41,6 +41,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from . import epilogue as _ep
 from . import pallas_compat as _compat
 
 
@@ -87,6 +88,41 @@ def _bspec(block: Tuple[int, int], batched: bool, imap):
     return pl.BlockSpec((1,) + block, lambda bb, *ij: (0,) + imap(*ij))
 
 
+def _check_epilogue(epilogue: Tuple[str, ...], bias, n: int, bn: int
+                    ) -> Tuple[str, ...]:
+    """Validate an epilogue spec against the template geometry.  Returns
+    the normalized spec; the reshaped rank-2 bias ``(1, n)`` is produced
+    by :func:`_bias2d`."""
+    epilogue = _ep.validate_spec(epilogue)
+    if _ep.needs_bias(epilogue) and bias is None:
+        raise ValueError(f"epilogue {epilogue} needs a bias operand")
+    if bias is not None and not _ep.needs_bias(epilogue):
+        raise ValueError(f"bias operand given but epilogue {epilogue} "
+                         f"has no 'bias' op")
+    if _ep.has_softmax(epilogue) and bn != n:
+        raise ValueError(
+            f"softmax epilogue needs one output block spanning the full "
+            f"row (bn == n), got bn={bn} n={n}; a partial row cannot be "
+            f"normalized block-locally")
+    return epilogue
+
+
+def _bias2d(bias, n: int) -> jax.Array:
+    bias = jnp.asarray(bias)
+    if bias.shape != (n,):
+        raise ValueError(f"bias must be rank-1 of length n={n}, "
+                         f"got shape {bias.shape}")
+    return bias.astype(jnp.float32).reshape(1, n)
+
+
+def _flush_block(acc, bias_ref, epilogue: Tuple[str, ...], out_dtype):
+    """The shared flush: epilogue on the fp32 block, then cast."""
+    if epilogue:
+        b = bias_ref[...] if bias_ref is not None else None
+        acc = _ep.apply_epilogue(acc, epilogue, bias=b)
+    return acc.astype(out_dtype)
+
+
 def operand_stationary_strip_bytes(m: int, bn: int) -> int:
     """VMEM footprint of the (m, bn) fp32 strip accumulator the
     operand-stationary template allocates **per batch slice** (the batch
@@ -121,8 +157,10 @@ OS_GRID_ORDERS = ("mnk", "nmk", "kmn", "knm")
 ACCUM_MODES = ("scratch", "inplace")
 
 
-def _os_kernel_scratch(a_ref, b_ref, o_ref, acc_ref, *, n_k: int,
-                       k_axis: int, out_dtype):
+def _os_kernel_scratch(a_ref, b_ref, *rest, n_k: int, k_axis: int,
+                       out_dtype, epilogue: Tuple[str, ...] = ()):
+    bias_ref = rest[0] if len(rest) == 3 else None
+    o_ref, acc_ref = rest[-2], rest[-1]
     @pl.when(pl.program_id(k_axis) == 0)
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
@@ -130,16 +168,26 @@ def _os_kernel_scratch(a_ref, b_ref, o_ref, acc_ref, *, n_k: int,
                             preferred_element_type=jnp.float32)
     @pl.when(pl.program_id(k_axis) == n_k - 1)
     def _flush():
-        o_ref[0] = acc_ref[...].astype(out_dtype)
+        o_ref[0] = _flush_block(acc_ref[...], bias_ref, epilogue, out_dtype)
 
 
-def _os_kernel_inplace(a_ref, b_ref, o_ref, *, n_k: int, k_axis: int,
-                       out_dtype):
+def _os_kernel_inplace(a_ref, b_ref, *rest, n_k: int, k_axis: int,
+                       out_dtype, epilogue: Tuple[str, ...] = ()):
+    bias_ref = rest[0] if len(rest) == 2 else None
+    o_ref = rest[-1]
     @pl.when(pl.program_id(k_axis) == 0)
     def _init():
         o_ref[0] = jnp.zeros_like(o_ref[0])
     o_ref[0] += jnp.dot(a_ref[0], b_ref[0],
                         preferred_element_type=jnp.float32).astype(out_dtype)
+    if epilogue:
+        # the accumulated block is final at the last k-step; the epilogue
+        # reads it back at fp32 (the in-place strategy's usual precision
+        # trade applies to the pre-epilogue sums)
+        @pl.when(pl.program_id(k_axis) == n_k - 1)
+        def _epi():
+            o_ref[0] = _flush_block(o_ref[0].astype(jnp.float32), bias_ref,
+                                    epilogue, out_dtype)
 
 
 def matmul_output_stationary(a: jax.Array, b: jax.Array, *,
@@ -147,7 +195,9 @@ def matmul_output_stationary(a: jax.Array, b: jax.Array, *,
                              bk: int = DEFAULT_BLOCK,
                              grid_order: str = "mnk",
                              accum: str = "scratch",
-                             out_dtype=None, interpret: bool = False
+                             out_dtype=None, interpret: bool = False,
+                             epilogue: Tuple[str, ...] = (),
+                             bias: Optional[jax.Array] = None
                              ) -> jax.Array:
     from jax.experimental.pallas import tpu as pltpu
     if grid_order == "default":
@@ -168,6 +218,7 @@ def matmul_output_stationary(a: jax.Array, b: jax.Array, *,
     a3, b3, nb, squeeze = _as_batched(a, b)
     (m, k), n = a3.shape[1:], b3.shape[2]
     _validate(m, n, k, bm, bn, bk)
+    epilogue = _check_epilogue(epilogue, bias, n, bn)
     out_dtype = out_dtype or a.dtype
     n_k = k // bk
     counts = {"m": m // bm, "n": n // bn, "k": n_k}
@@ -175,21 +226,29 @@ def matmul_output_stationary(a: jax.Array, b: jax.Array, *,
     k_axis = 1 + ix["k"]                            # grid axis incl. batch
     if accum == "scratch":
         kernel = functools.partial(_os_kernel_scratch, n_k=n_k,
-                                   k_axis=k_axis, out_dtype=out_dtype)
+                                   k_axis=k_axis, out_dtype=out_dtype,
+                                   epilogue=epilogue)
         scratch = [pltpu.VMEM((bm, bn), jnp.float32)]
     else:
         kernel = functools.partial(_os_kernel_inplace, n_k=n_k,
-                                   k_axis=k_axis, out_dtype=out_dtype)
+                                   k_axis=k_axis, out_dtype=out_dtype,
+                                   epilogue=epilogue)
         scratch = []
     semantics = ("parallel",) + tuple(
         "arbitrary" if c == "k" else "parallel" for c in grid_order)
+    in_specs = [_bspec((bm, bk), a3.shape[0] > 1,
+                       lambda *ids: (ids[ix["m"]], ids[ix["k"]])),
+                _bspec((bk, bn), b3.shape[0] > 1,
+                       lambda *ids: (ids[ix["k"]], ids[ix["n"]]))]
+    inputs = [a3, b3]
+    if bias is not None:
+        in_specs.append(pl.BlockSpec(
+            (1, bn), lambda bb, *ids: (0, ids[ix["n"]])))
+        inputs.append(_bias2d(bias, n))
     out = pl.pallas_call(
         kernel,
         grid=(nb,) + tuple(counts[c] for c in grid_order),
-        in_specs=[_bspec((bm, bk), a3.shape[0] > 1,
-                         lambda *ids: (ids[ix["m"]], ids[ix["k"]])),
-                  _bspec((bk, bn), b3.shape[0] > 1,
-                         lambda *ids: (ids[ix["k"]], ids[ix["n"]]))],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec(
             (1, bm, bn),
             lambda bb, *ids: (bb, ids[ix["m"]], ids[ix["n"]])),
@@ -198,7 +257,7 @@ def matmul_output_stationary(a: jax.Array, b: jax.Array, *,
         compiler_params=_compat.CompilerParams(
             dimension_semantics=semantics),
         interpret=interpret,
-    )(a3, b3)
+    )(*inputs)
     return out[0] if squeeze else out
 
 
@@ -211,8 +270,10 @@ def matmul_output_stationary(a: jax.Array, b: jax.Array, *,
 # output strip it contributes to lives in VMEM and the other operand streams
 # past it.  VMEM bound: strip_len * block * 4B per batch slice (checked).
 
-def _ws_kernel(a_ref, b_ref, o_ref, acc_ref, *, n_k: int, bm: int,
-               out_dtype):
+def _ws_kernel(a_ref, b_ref, *rest, n_k: int, bm: int, out_dtype,
+               epilogue: Tuple[str, ...] = ()):
+    bias_ref = rest[0] if len(rest) == 3 else None
+    o_ref, acc_ref = rest[-2], rest[-1]
     kk, i = pl.program_id(2), pl.program_id(3)
     sl = pl.ds(i * bm, bm)
     @pl.when(kk == 0)
@@ -222,7 +283,8 @@ def _ws_kernel(a_ref, b_ref, o_ref, acc_ref, *, n_k: int, bm: int,
                               preferred_element_type=jnp.float32)
     @pl.when(kk == n_k - 1)
     def _flush():
-        o_ref[0] = acc_ref[sl, :].astype(out_dtype)
+        o_ref[0] = _flush_block(acc_ref[sl, :], bias_ref, epilogue,
+                                out_dtype)
 
 
 def matmul_operand_stationary(a: jax.Array, b: jax.Array, *,
@@ -230,7 +292,9 @@ def matmul_operand_stationary(a: jax.Array, b: jax.Array, *,
                               bm: int = DEFAULT_BLOCK, bn: int = DEFAULT_BLOCK,
                               bk: int = DEFAULT_BLOCK,
                               out_dtype=None, interpret: bool = False,
-                              vmem_budget: Optional[int] = DEFAULT_VMEM_BUDGET
+                              vmem_budget: Optional[int] = DEFAULT_VMEM_BUDGET,
+                              epilogue: Tuple[str, ...] = (),
+                              bias: Optional[jax.Array] = None
                               ) -> jax.Array:
     """``stationary='B'``: grid (batch, n, k, m) keeps the B block pinned
     while A streams (weight-stationary);  ``stationary='A'`` is the
@@ -246,6 +310,14 @@ def matmul_operand_stationary(a: jax.Array, b: jax.Array, *,
     """
     from jax.experimental.pallas import tpu as pltpu
     if stationary == "A":
+        if epilogue:
+            # the transposition realization swaps the m/n axes, so a
+            # last-axis epilogue would act on the wrong dimension;
+            # ops.stt_matmul reroutes epilogue'd calls to the
+            # output-stationary template before reaching here
+            raise ValueError("epilogue fusion is not supported on the "
+                             "input-stationary (stationary='A') "
+                             "transposition path")
         out = matmul_operand_stationary(
             jnp.swapaxes(b, -1, -2), jnp.swapaxes(a, -1, -2),
             stationary="B", bm=bn, bn=bm, bk=bk,
@@ -257,6 +329,7 @@ def matmul_operand_stationary(a: jax.Array, b: jax.Array, *,
     a3, b3, nb, squeeze = _as_batched(a, b)
     (m, k), n = a3.shape[1:], b3.shape[2]
     _validate(m, n, k, bm, bn, bk)
+    epilogue = _check_epilogue(epilogue, bias, n, bn)
     strip = operand_stationary_strip_bytes(m, bn)
     if vmem_budget is not None and strip > vmem_budget:
         raise ValueError(
@@ -268,15 +341,21 @@ def matmul_operand_stationary(a: jax.Array, b: jax.Array, *,
     out_dtype = out_dtype or a.dtype
     n_k = k // bk
     kernel = functools.partial(_ws_kernel, n_k=n_k, bm=bm,
-                               out_dtype=out_dtype)
+                               out_dtype=out_dtype, epilogue=epilogue)
+    in_specs = [_bspec((bm, bk), a3.shape[0] > 1,
+                       lambda j, kk, i: (i, kk)),
+                # B block constant along the inner m axis -> VMEM-resident
+                _bspec((bk, bn), b3.shape[0] > 1,
+                       lambda j, kk, i: (kk, j))]
+    inputs = [a3, b3]
+    if bias is not None:
+        in_specs.append(pl.BlockSpec((1, bn),
+                                     lambda bb, j, kk, i: (0, j)))
+        inputs.append(_bias2d(bias, n))
     out = pl.pallas_call(
         kernel,
         grid=(nb, n // bn, n_k, m // bm),
-        in_specs=[_bspec((bm, bk), a3.shape[0] > 1,
-                         lambda j, kk, i: (i, kk)),
-                  # B block constant along the inner m axis -> VMEM-resident
-                  _bspec((bk, bn), b3.shape[0] > 1,
-                         lambda j, kk, i: (kk, j))],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, bm, bn),
                                lambda bb, j, kk, i: (bb, i, j)),
         out_shape=jax.ShapeDtypeStruct((nb, m, n), out_dtype),
@@ -285,7 +364,7 @@ def matmul_operand_stationary(a: jax.Array, b: jax.Array, *,
             dimension_semantics=("parallel", "parallel", "arbitrary",
                                  "arbitrary")),
         interpret=interpret,
-    )(a3, b3)
+    )(*inputs)
     return out[0] if squeeze else out
 
 
@@ -293,9 +372,12 @@ def matmul_operand_stationary(a: jax.Array, b: jax.Array, *,
 # reduction-tree (K-spatial class): full-K blocks, single MXU reduction
 # ---------------------------------------------------------------------------
 
-def _rt_kernel(a_ref, b_ref, o_ref, *, out_dtype):
-    o_ref[0] = jnp.dot(a_ref[0], b_ref[0],
-                       preferred_element_type=jnp.float32).astype(out_dtype)
+def _rt_kernel(a_ref, b_ref, *rest, out_dtype,
+               epilogue: Tuple[str, ...] = ()):
+    bias_ref = rest[0] if len(rest) == 2 else None
+    o_ref = rest[-1]
+    acc = jnp.dot(a_ref[0], b_ref[0], preferred_element_type=jnp.float32)
+    o_ref[0] = _flush_block(acc, bias_ref, epilogue, out_dtype)
 
 
 #: valid reduction-tree grid orders (no k axis: the whole reduction runs
@@ -306,7 +388,9 @@ RT_GRID_ORDERS = ("mn", "nm")
 def matmul_reduction_tree(a: jax.Array, b: jax.Array, *,
                           bm: int = DEFAULT_BLOCK, bn: int = DEFAULT_BLOCK,
                           grid_order: str = "mn",
-                          out_dtype=None, interpret: bool = False
+                          out_dtype=None, interpret: bool = False,
+                          epilogue: Tuple[str, ...] = (),
+                          bias: Optional[jax.Array] = None
                           ) -> jax.Array:
     if grid_order == "default":
         grid_order = "mn"
@@ -316,24 +400,32 @@ def matmul_reduction_tree(a: jax.Array, b: jax.Array, *,
     a3, b3, nb, squeeze = _as_batched(a, b)
     (m, k), n = a3.shape[1:], b3.shape[2]
     _validate(m, n, k, bm, bn, k)
+    epilogue = _check_epilogue(epilogue, bias, n, bn)
     out_dtype = out_dtype or a.dtype
     counts = {"m": m // bm, "n": n // bn}
     ix = {c: i for i, c in enumerate(grid_order)}
-    kernel = functools.partial(_rt_kernel, out_dtype=out_dtype)
+    kernel = functools.partial(_rt_kernel, out_dtype=out_dtype,
+                               epilogue=epilogue)
+    in_specs = [_bspec((bm, k), a3.shape[0] > 1,
+                       lambda *ids: (ids[ix["m"]], 0)),
+                _bspec((k, bn), b3.shape[0] > 1,
+                       lambda *ids: (0, ids[ix["n"]]))]
+    inputs = [a3, b3]
+    if bias is not None:
+        in_specs.append(pl.BlockSpec(
+            (1, bn), lambda bb, *ids: (0, ids[ix["n"]])))
+        inputs.append(_bias2d(bias, n))
     out = pl.pallas_call(
         kernel,
         grid=(nb,) + tuple(counts[c] for c in grid_order),
-        in_specs=[_bspec((bm, k), a3.shape[0] > 1,
-                         lambda *ids: (ids[ix["m"]], 0)),
-                  _bspec((k, bn), b3.shape[0] > 1,
-                         lambda *ids: (0, ids[ix["n"]]))],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec(
             (1, bm, bn), lambda bb, *ids: (bb, ids[ix["m"]], ids[ix["n"]])),
         out_shape=jax.ShapeDtypeStruct((nb, m, n), out_dtype),
         compiler_params=_compat.CompilerParams(
             dimension_semantics=("parallel", "parallel", "parallel")),
         interpret=interpret,
-    )(a3, b3)
+    )(*inputs)
     return out[0] if squeeze else out
 
 

@@ -1,0 +1,147 @@
+"""Reference chains: AlgebraGraph builders + the explicit-schedule oracle.
+
+The graph subsystem's acceptance story (ISSUE/ROADMAP): a 2-layer
+attention+MLP chain compiles through ``repro.generate(graph)`` with the
+softmax/bias/gelu epilogues folded into the producing kernels, and the
+result is **bit-identical** to the explicit-TP model's math.  The
+schedules ``models/explicit_tp.py`` emits on a mesh degenerate, at
+model-parallel size 1, to exactly the plain fp32 dots written out here
+(``qkv_manual``/``chunked_attn_manual``/``mlp_manual`` each fall back to
+one local dot per projection); this module is that degenerate case as a
+runnable single-chip oracle, sharing the *same* epilogue functions
+(``kernels/epilogue.py``) the fused kernels flush through — so parity is
+exact, not approximate:
+
+* every gemm is one fp32 ``jnp.dot`` — the planner's tile agreement
+  gives fused nodes whole-tensor blocks, so the kernel, too, issues
+  exactly one dot per node,
+* scale/softmax/bias/gelu go through ``epilogue.apply_epilogue`` in
+  both worlds.
+
+Layout conventions follow the paper's gemm (``C[m,n] += A[m,k]*B[n,k]``,
+i.e. the B operand is stored (n, k) and used transposed): attention
+takes ``K`` as (Lkv, d) and ``Vt`` as (dv, Lkv); MLP weights are stored
+(out_features, in_features).
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..core.algebra import get_algebra
+from ..graph.ir import AlgebraGraph, GraphNode
+from ..kernels import epilogue as epilogue_mod
+
+
+def _dot(a: jax.Array, b: jax.Array) -> jax.Array:
+    return jnp.dot(jnp.asarray(a).astype(jnp.float32),
+                   jnp.asarray(b).astype(jnp.float32),
+                   preferred_element_type=jnp.float32)
+
+
+def _scale_op(d: int) -> str:
+    return f"scale:{1.0 / math.sqrt(d)}"
+
+
+# ---------------------------------------------------------------------------
+# Graph builders
+# ---------------------------------------------------------------------------
+
+def attention_graph(lq: int = 64, lkv: int = 64, d: int = 64,
+                    dv: int = 64, prefix: str = "",
+                    q_edge: str = "Q") -> AlgebraGraph:
+    """Single-head attention as a graph:
+    ``softmax(Q @ K.T / sqrt(d)) @ V`` with ``K`` (lkv, d) and ``Vt``
+    (dv, lkv) in the paper's (n, k) operand layout."""
+    p = prefix
+    nodes = (
+        GraphNode(name=f"{p}scores", inputs=(q_edge, f"{p}K"),
+                  output=f"{p}s_raw", algebra=get_algebra(
+                      "gemm", m=lq, n=lkv, k=d)),
+        GraphNode(name=f"{p}scale", inputs=(f"{p}s_raw",),
+                  output=f"{p}s_scaled", op=_scale_op(d)),
+        GraphNode(name=f"{p}softmax", inputs=(f"{p}s_scaled",),
+                  output=f"{p}probs", op="softmax"),
+        GraphNode(name=f"{p}attend", inputs=(f"{p}probs", f"{p}Vt"),
+                  output=f"{p}attn", algebra=get_algebra(
+                      "gemm", m=lq, n=dv, k=lkv)),
+    )
+    return AlgebraGraph(nodes=nodes,
+                        inputs=(q_edge, f"{p}K", f"{p}Vt"),
+                        output=f"{p}attn")
+
+
+def mlp_graph(l: int = 64, d: int = 64, f: int = 128,
+              d_out: Optional[int] = None, prefix: str = "",
+              x_edge: str = "x") -> AlgebraGraph:
+    """gemm·bias·gelu·gemm: ``gelu(x @ W1.T + b1) @ W2.T`` with weights
+    stored (out_features, in_features)."""
+    p = prefix
+    d_out = d if d_out is None else d_out
+    nodes = (
+        GraphNode(name=f"{p}up", inputs=(x_edge, f"{p}W1"),
+                  output=f"{p}h_raw", algebra=get_algebra(
+                      "gemm", m=l, n=f, k=d)),
+        GraphNode(name=f"{p}bias1", inputs=(f"{p}h_raw", f"{p}b1"),
+                  output=f"{p}h_biased", op="bias"),
+        GraphNode(name=f"{p}act", inputs=(f"{p}h_biased",),
+                  output=f"{p}h", op="gelu"),
+        GraphNode(name=f"{p}down", inputs=(f"{p}h", f"{p}W2"),
+                  output=f"{p}y", algebra=get_algebra(
+                      "gemm", m=l, n=d_out, k=f)),
+    )
+    return AlgebraGraph(nodes=nodes,
+                        inputs=(x_edge, f"{p}W1", f"{p}b1", f"{p}W2"),
+                        output=f"{p}y")
+
+
+def attention_mlp_graph(lq: int = 64, lkv: int = 64, d: int = 64,
+                        dv: int = 64, f: int = 128,
+                        d_out: Optional[int] = None) -> AlgebraGraph:
+    """The 2-layer acceptance chain: attention feeding an MLP, six
+    algebra nodes + four epilogue nodes in one DAG.  The attention
+    output edge fuses straight into the MLP's up-projection lhs."""
+    attn = attention_graph(lq, lkv, d, dv)
+    mlp = mlp_graph(lq, dv, f, d_out, prefix="mlp_", x_edge="attn")
+    return AlgebraGraph(nodes=attn.nodes + mlp.nodes,
+                        inputs=attn.inputs + tuple(
+                            e for e in mlp.inputs if e != "attn"),
+                        output=mlp.output)
+
+
+# ---------------------------------------------------------------------------
+# Explicit-schedule oracle (explicit-TP math at model-parallel size 1)
+#
+# The oracles are jitted: eager (op-at-a-time) execution skips the FMA
+# contractions XLA applies when it compiles the same epilogue expression
+# inside a kernel, which costs the last ulp of the gelu/softmax math.
+# Compiled-vs-compiled, parity with the fused kernels is exact.
+# ---------------------------------------------------------------------------
+
+@jax.jit
+def attention_oracle(q: jax.Array, k: jax.Array, vt: jax.Array
+                     ) -> jax.Array:
+    d = q.shape[-1]
+    s = _dot(q, jnp.asarray(k).T)
+    probs = epilogue_mod.apply_epilogue(s, (_scale_op(d), "softmax"))
+    return _dot(probs, jnp.asarray(vt).T)
+
+
+@jax.jit
+def mlp_oracle(x: jax.Array, w1: jax.Array, b1: jax.Array,
+               w2: jax.Array) -> jax.Array:
+    h = epilogue_mod.apply_epilogue(
+        _dot(x, jnp.asarray(w1).T), ("bias", "gelu"),
+        bias=jnp.asarray(b1, jnp.float32))
+    return _dot(h, jnp.asarray(w2).T)
+
+
+@jax.jit
+def attention_mlp_oracle(operands: Dict[str, jax.Array]) -> jax.Array:
+    """Oracle over the operand dict of :func:`attention_mlp_graph`."""
+    attn = attention_oracle(operands["Q"], operands["K"], operands["Vt"])
+    return mlp_oracle(attn, operands["mlp_W1"], operands["mlp_b1"],
+                      operands["mlp_W2"])

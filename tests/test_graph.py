@@ -1,0 +1,323 @@
+"""Algebra graphs (PR 8): IR validation, planning, fusion, execution.
+
+Covers the graph tentpole's contract surface:
+
+* IR construction catches bad wiring (cycles, shape mismatches, unknown
+  edges) at build time,
+* a single-node graph degenerates bit-exactly to ``generate(alg)`` and
+  shares its compile-cache entry,
+* the attention+MLP chain is bit-identical to the explicit-schedule
+  oracle with strictly fewer HBM bytes than the unfused pricing,
+* non-fusable edges (B-side operand, dtype change) fall back to an HBM
+  materialization with the cost charged,
+* a diamond DAG executes its shared producer exactly once,
+* the tuning cache never replays a standalone variant for a fused-group
+  or epilogue'd lowering (the ``_cache_key`` regression).
+"""
+import numpy as np
+import pytest
+
+import repro
+from repro.compile import pipeline
+from repro.core.algebra import get_algebra
+from repro.core.costmodel import GraphCostReport
+from repro.core import dse
+from repro.graph import AlgebraGraph, GraphNode, plan_graph
+from repro.models import chains
+from repro.tune import cache as tune_cache
+
+
+def small_gemm(m=16, n=16, k=16):
+    return get_algebra("gemm", m=m, n=n, k=k)
+
+
+def single_node_graph():
+    return AlgebraGraph(
+        nodes=(GraphNode(name="mm", inputs=("A", "B"), output="C",
+                         algebra=small_gemm()),),
+        inputs=("A", "B"), output="C")
+
+
+def chain_graph():
+    """gemm -> gelu -> gemm, all fusable (the quickstart shape)."""
+    return AlgebraGraph(
+        nodes=(
+            GraphNode(name="g1", inputs=("x", "W1"), output="h_raw",
+                      algebra=small_gemm()),
+            GraphNode(name="act", inputs=("h_raw",), output="h",
+                      op="gelu"),
+            GraphNode(name="g2", inputs=("h", "W2"), output="y",
+                      algebra=small_gemm()),
+        ),
+        inputs=("x", "W1", "W2"), output="y")
+
+
+# ---------------------------------------------------------------------------
+# IR validation
+# ---------------------------------------------------------------------------
+
+class TestIR:
+    def test_cycle_rejected(self):
+        with pytest.raises(ValueError, match="cycle"):
+            AlgebraGraph(
+                nodes=(GraphNode(name="a", inputs=("y",), output="x",
+                                 op="relu"),
+                       GraphNode(name="b", inputs=("x",), output="y",
+                                 op="relu")),
+                inputs=(), output="y")
+
+    def test_shape_mismatch_rejected(self):
+        with pytest.raises(ValueError, match="shape mismatch"):
+            AlgebraGraph(
+                nodes=(GraphNode(name="g1", inputs=("x", "W"), output="h",
+                                 algebra=small_gemm(16, 32, 16)),
+                       GraphNode(name="g2", inputs=("h", "V"), output="y",
+                                 algebra=small_gemm(16, 16, 16))),
+                inputs=("x", "W", "V"), output="y")
+
+    def test_unknown_edge_rejected(self):
+        with pytest.raises(ValueError, match="unknown edge"):
+            AlgebraGraph(
+                nodes=(GraphNode(name="g", inputs=("x", "nope"),
+                                 output="y", algebra=small_gemm()),),
+                inputs=("x",), output="y")
+
+    def test_duplicate_producer_rejected(self):
+        with pytest.raises(ValueError, match="produced by both"):
+            AlgebraGraph(
+                nodes=(GraphNode(name="a", inputs=("x",), output="y",
+                                 op="relu"),
+                       GraphNode(name="b", inputs=("x",), output="y",
+                                 op="tanh")),
+                inputs=("x",), output="y")
+
+    def test_epilogue_arity(self):
+        with pytest.raises(ValueError, match="input edge"):
+            GraphNode(name="b", inputs=("x",), output="y", op="bias")
+
+    def test_reference_matches_manual(self):
+        g = chain_graph()
+        ops = g.random_operands(0)
+        h = ops["x"].astype(np.float64) @ ops["W1"].T.astype(np.float64)
+        from repro.kernels.epilogue import apply_epilogue_np
+        want = apply_epilogue_np(h, ("gelu",)) @ ops["W2"].T
+        got = g.reference(ops)
+        np.testing.assert_allclose(got, want, atol=1e-9)
+
+
+# ---------------------------------------------------------------------------
+# Degeneration: one node == generate(alg)
+# ---------------------------------------------------------------------------
+
+class TestSingleNode:
+    def test_bit_exact_and_cache_shared(self):
+        g = single_node_graph()
+        acc_g = repro.generate(g)
+        acc_a = repro.generate(small_gemm())
+        # the unconstrained node lowers with no fused_group/epilogue and
+        # therefore shares the standalone compile-cache entry
+        assert acc_g.kernels["mm"] is acc_a.kernel
+        ops = g.random_operands(0)
+        got = np.asarray(acc_g(ops))
+        want = np.asarray(acc_a({"A": ops["A"], "B": ops["B"]}))
+        assert (got == want).all()
+
+    def test_cost_report_shape(self):
+        rep = repro.generate(single_node_graph()).cost_report()
+        assert isinstance(rep, GraphCostReport)
+        assert rep.fused_edges == ()
+        assert rep.hbm_bytes == rep.hbm_bytes_unfused  # nothing to fuse
+        assert rep.cycles > 0
+
+
+# ---------------------------------------------------------------------------
+# Fusion: chain parity + honest byte accounting
+# ---------------------------------------------------------------------------
+
+class TestFusedChains:
+    def test_gelu_chain_fuses_and_validates(self):
+        g = chain_graph()
+        acc = repro.generate(g)
+        p = acc.plan.nodes["g1"]
+        assert p.epilogue == ("gelu",) and p.epilogue_fused
+        rep = acc.cost_report()
+        assert len(rep.fused_edges) == 1
+        assert rep.hbm_bytes < rep.hbm_bytes_unfused
+        acc.validate(seed=0)
+
+    def test_attention_mlp_bit_parity(self):
+        g = chains.attention_mlp_graph(lq=32, lkv=32, d=32, dv=32, f=64)
+        acc = repro.generate(g)
+        ops = g.random_operands(1)
+        got = np.asarray(acc(ops))
+        want = np.asarray(chains.attention_mlp_oracle(
+            {k: v for k, v in ops.items()}))
+        assert got.shape == want.shape
+        assert (got == want).all(), \
+            f"max err {np.abs(got - want).max():.3e}"
+
+    def test_attention_mlp_fewer_hbm_bytes(self):
+        g = chains.attention_mlp_graph(lq=32, lkv=32, d=32, dv=32, f=64)
+        rep = repro.generate(g).cost_report()
+        assert len(rep.fused_edges) == 3     # probs, attn, mlp_h
+        assert rep.hbm_bytes < rep.hbm_bytes_unfused
+        assert rep.saved_hbm_bytes > 0
+        assert rep.hbm_ratio > 1.3
+        # the softmax/gelu epilogues are folded into the gemm kernels
+        plan = repro.generate(g).plan
+        assert plan.nodes["scores"].epilogue == \
+            (chains._scale_op(32), "softmax")
+        assert plan.nodes["mlp_up"].epilogue == ("bias", "gelu")
+
+    def test_search_graph_returns_plan(self):
+        g = chain_graph()
+        plan = dse.search_graph(g, search=2)
+        assert set(plan.nodes) == {"g1", "g2"}
+        rep = plan.cost_report()
+        assert rep.cycles > 0 and rep.hbm_bytes <= rep.hbm_bytes_unfused
+
+
+# ---------------------------------------------------------------------------
+# Non-fusable edges fall back to materialization, cost charged
+# ---------------------------------------------------------------------------
+
+class TestMaterialization:
+    def b_side_graph(self):
+        """g2 consumes g1's output as its *B* operand (stored
+        transposed by gemm's prepare) — never fusable."""
+        return AlgebraGraph(
+            nodes=(
+                GraphNode(name="g1", inputs=("x", "W1"), output="h",
+                          algebra=small_gemm()),
+                GraphNode(name="g2", inputs=("y2", "h"), output="z",
+                          algebra=small_gemm()),
+            ),
+            inputs=("x", "W1", "y2"), output="z")
+
+    def test_b_side_edge_materializes(self):
+        g = self.b_side_graph()
+        acc = repro.generate(g)
+        rep = acc.cost_report()
+        assert rep.fused_edges == ()
+        mats = dict(rep.materialized_edges)
+        assert any("transposed" in why for why in mats.values())
+        # the materialized edge is charged: write + read of 16x16 fp32
+        assert rep.edge_bytes["h"] == 2 * 16 * 16 * 4
+        acc.validate(seed=0)
+
+    def test_dtype_change_blocks_fusion(self):
+        g = AlgebraGraph(
+            nodes=(
+                GraphNode(name="g1", inputs=("x", "W1"), output="h",
+                          algebra=small_gemm()),
+                GraphNode(name="g2", inputs=("h", "W2"), output="y",
+                          algebra=small_gemm(), dtype="bfloat16"),
+            ),
+            inputs=("x", "W1", "W2"), output="y")
+        plan = plan_graph(g)
+        edge = next(e for e in plan.edges if e.producer == "g1")
+        assert not edge.fused and "dtype" in edge.reason
+        rep = plan.cost_report()
+        assert rep.fused_edges == ()
+
+    def test_fanout_blocks_epilogue_folding(self):
+        # h_raw has two consumers: the epilogue cannot fold into g1
+        g = AlgebraGraph(
+            nodes=(
+                GraphNode(name="g1", inputs=("x", "W1"), output="h_raw",
+                          algebra=small_gemm()),
+                GraphNode(name="act", inputs=("h_raw",), output="h",
+                          op="relu"),
+                GraphNode(name="g2", inputs=("h", "W2"), output="y1",
+                          algebra=small_gemm()),
+                GraphNode(name="g3", inputs=("h_raw", "W3"), output="y2",
+                          algebra=small_gemm()),
+                GraphNode(name="last", inputs=("y1", "y2"), output="z",
+                          algebra=small_gemm()),
+            ),
+            inputs=("x", "W1", "W2", "W3"), output="z")
+        acc = repro.generate(g)
+        assert acc.plan.nodes["g1"].epilogue == ()
+        # the standalone relu node pays its round trip in the pricing
+        assert acc.cost_report().edge_bytes["h"] > 0
+        acc.validate(seed=1)
+
+
+# ---------------------------------------------------------------------------
+# Diamond DAG: shared producer executes once
+# ---------------------------------------------------------------------------
+
+class TestDiamond:
+    def diamond(self):
+        return AlgebraGraph(
+            nodes=(
+                GraphNode(name="p", inputs=("x", "W"), output="c",
+                          algebra=small_gemm()),
+                GraphNode(name="q1", inputs=("c", "W1"), output="o1",
+                          algebra=small_gemm()),
+                GraphNode(name="q2", inputs=("c", "W2"), output="o2",
+                          algebra=small_gemm()),
+                GraphNode(name="r", inputs=("o1", "o2"), output="z",
+                          algebra=small_gemm()),
+            ),
+            inputs=("x", "W", "W1", "W2"), output="z")
+
+    def test_producer_runs_once(self, monkeypatch):
+        g = self.diamond()
+        acc = repro.generate(g)       # lower (and validate) first
+        calls = []
+        orig = pipeline.CompiledKernel.__call__
+
+        def counting(self, operands):
+            calls.append(self.algebra.name)
+            return orig(self, operands)
+
+        monkeypatch.setattr(pipeline.CompiledKernel, "__call__", counting)
+        ops = g.random_operands(0)
+        got = np.asarray(acc(ops))
+        assert len(calls) == 4        # p, q1, q2, r — p not re-computed
+        np.testing.assert_allclose(
+            got, g.reference(ops).astype(np.float64), atol=1e-3)
+
+    def test_fanout_edge_priced_per_consumer(self):
+        rep = plan_graph(self.diamond()).cost_report()
+        # c fans out to two consumers: at most one write + unfused reads
+        # are charged; both q-edges into r can never both fuse (B side)
+        assert rep.hbm_bytes <= rep.hbm_bytes_unfused
+
+
+# ---------------------------------------------------------------------------
+# Tuning-cache keys: fused-group / epilogue never alias standalone
+# ---------------------------------------------------------------------------
+
+class TestTuneCacheKeys:
+    def test_fused_group_not_served_standalone_variant(self):
+        alg = small_gemm()
+        df = pipeline.default_dataflow(alg)
+        base = pipeline._cache_key(alg, df, pipeline.ArrayConfig(),
+                                   "float32", True, "pallas")
+        tune_cache.store_variant(tune_cache.key_of(base),
+                                 blocks=(8, 8, 8), grid_order="mnk",
+                                 accum="scratch")
+        pipeline.cache_clear()
+        plain = pipeline.lower(alg, df, interpret=True)
+        assert plain.source == "tuned" and plain.blocks == (8, 8, 8)
+        fused = pipeline.lower(alg, df, interpret=True,
+                               fused_group="g:test")
+        assert fused.source == "analytical" and fused.blocks != (8, 8, 8)
+        epi = pipeline.lower(alg, df, interpret=True, epilogue=("relu",))
+        assert epi.source == "analytical"
+
+    def test_variant_stored_for_fused_group_is_found(self):
+        alg = small_gemm()
+        df = pipeline.default_dataflow(alg)
+        key = pipeline._cache_key(alg, df, pipeline.ArrayConfig(),
+                                  "float32", True, "pallas",
+                                  fused_group="g:test")
+        tune_cache.store_variant(tune_cache.key_of(key),
+                                 blocks=(4, 4, 4), grid_order="kmn",
+                                 accum="inplace")
+        pipeline.cache_clear()
+        fused = pipeline.lower(alg, df, interpret=True,
+                               fused_group="g:test")
+        assert fused.source == "tuned" and fused.blocks == (4, 4, 4)
