@@ -156,8 +156,8 @@ def main() -> None:
         assert row["blockdiag_ratio"] == row["batch"], row
         speedup = row["blockdiag_ms"] / row["folded_ms"]
         if row["batch"] >= 16:
-            worst_win_at_16 = speedup if worst_win_at_16 is None \
-                else min(worst_win_at_16, speedup)
+            worst_win_at_16 = (speedup if worst_win_at_16 is None
+                else min(worst_win_at_16, speedup))
         print(f"{row['algebra']},{row['batch']},{row['alg_macs']},"
               f"{row['folded_ratio']:.2f},{row['blockdiag_ratio']:.0f},"
               f"{row['folded_ms']:.3f},{row['blockdiag_ms']:.3f},"

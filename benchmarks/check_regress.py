@@ -71,8 +71,8 @@ def check(problems: list) -> None:
     if graph is not None:
         floor = graph.get("floor")
         chains = graph.get("chains")
-        if not isinstance(floor, (int, float)) \
-                or not isinstance(chains, list) or not chains:
+        if (not isinstance(floor, (int, float))
+                or not isinstance(chains, list) or not chains):
             problems.append("BENCH_graph.json: needs numeric 'floor' and "
                             "non-empty 'chains'")
         else:

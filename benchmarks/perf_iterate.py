@@ -197,8 +197,8 @@ def run_tune_cells(smoke: bool, out_path: str = "BENCH_tune.json") -> dict:
     if slow:
         raise SystemExit(f"tuned pick slower than untuned for: {slow}")
     for c in cells:
-        if c["algebra"] == "batched_gemv" \
-                and c["speedup"] < GEMV_MIN_SPEEDUP:
+        if (c["algebra"] == "batched_gemv"
+                and c["speedup"] < GEMV_MIN_SPEEDUP):
             raise SystemExit(
                 f"tuned batched_gemv speedup {c['speedup']:.2f}x below "
                 f"the {GEMV_MIN_SPEEDUP}x floor")

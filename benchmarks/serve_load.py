@@ -87,8 +87,8 @@ def run_continuous(params, cfg, workload, *, capacity: int, page_size: int,
             "steps": server.stats["steps"],
             "decode_compiles": engine.decode_compiles,
         }
-    assert engine.decode_compiles == 1, \
-        f"decode recompiled: {engine.decode_compiles} entries"
+    assert engine.decode_compiles == 1, (
+        f"decode recompiled: {engine.decode_compiles} entries")
     return stats, outputs
 
 
@@ -142,8 +142,8 @@ def check_parity(params, cfg, workload, outputs, *, max_context: int) -> None:
     for (_, prompt, t_new), got in zip(workload, outputs):
         want, _ = oracle.generate(prompt[None], max_new_tokens=t_new,
                                   cache_len=max_context)
-        assert np.array_equal(got, want[0]), \
-            f"parity broke: got {got.tolist()} want {want[0].tolist()}"
+        assert np.array_equal(got, want[0]), (
+            f"parity broke: got {got.tolist()} want {want[0].tolist()}")
 
 
 def main(argv=None) -> None:
@@ -207,8 +207,8 @@ def main(argv=None) -> None:
     print(f"speedup: {doc['speedup']:.2f}x | wrote {out_path.name}")
 
     if args.smoke:
-        assert doc["speedup"] >= 1.5, \
-            f"continuous batching speedup {doc['speedup']:.2f}x < 1.5x floor"
+        assert doc["speedup"] >= 1.5, (
+            f"continuous batching speedup {doc['speedup']:.2f}x < 1.5x floor")
 
 
 if __name__ == "__main__":

@@ -111,8 +111,8 @@ def main() -> None:
               f"{r['meta_kb']:.2f}")
     for prev, cur in zip(mrows, mrows[1:]):
         assert cur["cycles"] <= prev["cycles"], "cycles not monotone"
-        assert cur["traffic_mb"] + cur["meta_kb"] / 1e3 <= \
-            prev["traffic_mb"] + prev["meta_kb"] / 1e3, "traffic not monotone"
+        assert (cur["traffic_mb"] + cur["meta_kb"] / 1e3 <=
+            prev["traffic_mb"] + prev["meta_kb"] / 1e3), "traffic not monotone"
 
     print(f"\nexecution (gemm {EXEC_SIZE}^3, {EXEC_BLOCK}x{EXEC_BLOCK} "
           f"blocks, interpret mode, masked dense oracle):")

@@ -26,8 +26,8 @@ from repro.core.tpu import V5E
 
 
 def _time(fn, *args, iters=5) -> float:
-    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
-        jax.block_until_ready(fn(*args))
+    (fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else
+        jax.block_until_ready(fn(*args)))
     t0 = time.perf_counter()
     for _ in range(iters):
         out = fn(*args)

@@ -344,8 +344,8 @@ def generate(alg: Union[TensorAlgebra, str],
             raise ValueError("tune= is mutually exclusive with dataflow= "
                              "and search=")
         from . import tune as _tune_mod
-        width = tune if isinstance(tune, int) \
-            and not isinstance(tune, bool) else 4
+        width = (tune if isinstance(tune, int)
+            and not isinstance(tune, bool) else 4)
         result = _tune_mod.tune(algebra, search=width, cfg=cfg, dtype=dtype,
                                 interpret=interpret, backend=backend,
                                 validate=validate)

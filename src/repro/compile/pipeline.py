@@ -241,8 +241,8 @@ class CompiledKernel:
 #: matrix is 24 entries) while bounding long-running serving processes.
 DEFAULT_CACHE_CAPACITY = 256
 
-_CACHE: "collections.OrderedDict[Tuple, CompiledKernel]" = \
-    collections.OrderedDict()
+_CACHE: "collections.OrderedDict[Tuple, CompiledKernel]" = (
+    collections.OrderedDict())
 _CACHE_LOCK = threading.Lock()
 _CAPACITY = DEFAULT_CACHE_CAPACITY
 _STATS = {"hits": 0, "misses": 0, "evictions": 0}
@@ -331,8 +331,8 @@ def _epilogue_legal_for_form(alg: TensorAlgebra, form: LoweredForm,
     axis (gemm's identity finish is the canonical case) — otherwise the
     2-D in-kernel application and the finished-tensor semantics diverge.
     """
-    rowwise = epilogue_mod.needs_bias(epilogue) \
-        or epilogue_mod.has_softmax(epilogue)
+    rowwise = (epilogue_mod.needs_bias(epilogue)
+        or epilogue_mod.has_softmax(epilogue))
     if not rowwise:
         return None
     out_shape = alg.tensor_shape(alg.output)
@@ -394,8 +394,8 @@ def lower(alg: TensorAlgebra, df: Optional[Dataflow] = None, *,
     key = _cache_key(alg, df, cfg, dtype, interpret, backend,
                      epilogue, bias_tensor, fused_group)
     source, measured_s = "analytical", None
-    if blocks is None and grid_order is None and accum is None \
-            and tuned is not False:
+    if (blocks is None and grid_order is None and accum is None
+            and tuned is not False):
         # consult the measured-tuning cache before the analytical chooser
         from ..tune import cache as tune_cache
         entry = tune_cache.lookup_variant(tune_cache.key_of(key))
@@ -437,8 +437,8 @@ def lower(alg: TensorAlgebra, df: Optional[Dataflow] = None, *,
     if epilogue_mod.has_softmax(epilogue) and blocks[1] != form.n:
         # a row softmax needs the whole unpadded row in one block
         blocks = (blocks[0], form.n, blocks[2])
-    stationary = "A" if ep.kernel.resident_tensor in form.lhs_tensors \
-        else "B"
+    stationary = ("A" if ep.kernel.resident_tensor in form.lhs_tensors
+        else "B")
     kernel = CompiledKernel(
         algebra=alg, dataflow=df, plan=ep, form=form, blocks=blocks,
         stationary=stationary, cfg=cfg, dtype=jnp.dtype(dtype),

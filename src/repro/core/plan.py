@@ -375,8 +375,8 @@ class PartitionSolution:
             dense = self._side_elems(tp, ext)
             if tp.compressed and form.sparse is not None:
                 be = form.sparse.block[0] * form.sparse.block[1]
-                b = dense * tp.density * elem_bytes \
-                    + (dense * tp.density / be) * 2 * INDEX_BYTES
+                b = (dense * tp.density * elem_bytes
+                    + (dense * tp.density / be) * 2 * INDEX_BYTES)
             else:
                 b = dense * elem_bytes
             out[tp.side] = b
@@ -461,8 +461,8 @@ def solve_partition(comm: CommPlan, form, axes: Tuple[str, str] = ("x", "y"),
     sparse_side = form.sparse.side if form.sparse is not None else None
     if compressed is None:
         compressed = sparse_side is not None
-    compressed = bool(compressed) and sparse_side is not None \
-        and not form.batch
+    compressed = (bool(compressed) and sparse_side is not None
+        and not form.batch)
     notes = []
 
     def dens(tensors: FrozenSet[str]) -> float:
@@ -521,17 +521,17 @@ def _solve_out_stationary(comm, form, axes, sizes, lhs_kind, rhs_kind,
     # per-side motion: lhs moves along ax1 (its reuse spans n), rhs along
     # ax0.  A batched side whose batch shard occupies its motion axis
     # cannot also split k there: it degrades to resident full k.
-    lhs_motion = lhs_kind if lhs_kind in ("all_gather", "ppermute_ring") \
-        else None
-    rhs_motion = rhs_kind if rhs_kind in ("all_gather", "ppermute_ring") \
-        else None
+    lhs_motion = (lhs_kind if lhs_kind in ("all_gather", "ppermute_ring")
+        else None)
+    rhs_motion = (rhs_kind if rhs_kind in ("all_gather", "ppermute_ring")
+        else None)
     if batched and rb and rhs_motion is not None:
         rhs_motion = None
         notes.append("rhs k-motion degraded to resident: batch shard "
                      f"occupies {ax0}")
 
-    double_ring = lhs_motion == "ppermute_ring" \
-        and rhs_motion == "ppermute_ring"
+    double_ring = (lhs_motion == "ppermute_ring"
+        and rhs_motion == "ppermute_ring")
     if double_ring and (not square or
                         (compressed and sparse_side is not None)):
         # Cannon needs equal ring lengths (and skewed dense k-blocks,
@@ -549,8 +549,8 @@ def _solve_out_stationary(comm, form, axes, sizes, lhs_kind, rhs_kind,
                          "(dt staggering kept on rhs ring)")
         double_ring = False
 
-    if compressed and sparse_side == "lhs" \
-            and rhs_motion == "ppermute_ring":
+    if (compressed and sparse_side == "lhs"
+            and rhs_motion == "ppermute_ring"):
         # a ring on the *dense* side would hand the compressed side's
         # global-frame k coordinates only a rotating k-shard to index:
         # the dense side must be full-k at contract time, so its ring
@@ -559,8 +559,8 @@ def _solve_out_stationary(comm, form, axes, sizes, lhs_kind, rhs_kind,
         rhs_motion = "all_gather" if s0 > 1 else None
         notes.append("dense rhs ring degraded to all_gather (compressed "
                      "lhs needs full-k contract)")
-    if compressed and sparse_side == "rhs" \
-            and lhs_motion == "ppermute_ring":
+    if (compressed and sparse_side == "rhs"
+            and lhs_motion == "ppermute_ring"):
         lhs_motion = "all_gather" if s1 > 1 else None
         notes.append("dense lhs ring degraded to all_gather (compressed "
                      "rhs needs full-k contract)")
@@ -630,8 +630,8 @@ def _solve_k_spatial(comm, form, axes, sizes, lhs_kind, rhs_kind, out_tp,
     # the fully-partitioned ("shard"/"stream") input also splits its non-k
     # dim over the remaining axis; batch takes that axis when present, and
     # a staggered output chunks m over the ring axis instead
-    shard_m = other is not None and not batched \
-        and lhs_kind in ("shard", "stream") and not stagger
+    shard_m = (other is not None and not batched
+        and lhs_kind in ("shard", "stream") and not stagger)
     shard_n = other is not None and not batched and not shard_m
 
     grid = {"b": other if batched else None,
@@ -660,8 +660,8 @@ def _solve_k_spatial(comm, form, axes, sizes, lhs_kind, rhs_kind, out_tp,
 
     macs_split = math.prod(_axis_factor(grid[d], sizes)
                            for d in ("b", "m", "n", "k"))
-    strategy = "k_spatial_stagger" if stagger else \
-        ("k_spatial_ring" if ring else "k_spatial")
+    strategy = ("k_spatial_stagger" if stagger else
+        ("k_spatial_ring" if ring else "k_spatial"))
     return PartitionSolution(
         strategy, axes, (sizes[ax0], sizes[ax1]), grid, lhs, rhs, out,
         batch_axis=grid["b"], ring_axes=k_axes if ring else (),

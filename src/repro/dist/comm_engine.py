@@ -120,8 +120,8 @@ class MeshProgram:
     ring_axes: Tuple[str, ...]
     pads: Tuple[int, int, int]          # padding multiples for (m, n, k)
     solution: PartitionSolution = None
-    fn: Callable[[jax.Array, jax.Array], jax.Array] = \
-        dataclasses.field(repr=False, default=None)
+    fn: Callable[[jax.Array, jax.Array], jax.Array] = (
+        dataclasses.field(repr=False, default=None))
 
     def __call__(self, lhs: jax.Array, rhs: jax.Array) -> jax.Array:
         return self.fn(lhs, rhs)
@@ -272,10 +272,10 @@ def _compress_partition(form: "LoweredForm", sol: PartitionSolution,
                     continue
                 if shard_of(k_ax, i, j) != ki and k_ax is not None:
                     continue
-                stat_local = stat_id - (si if stat_ax is not None else 0) \
-                    * stat_per
-                k_out = k_id if k_frame == "global" else \
-                    k_id - (ki if k_ax is not None else 0) * k_per
+                stat_local = (stat_id - (si if stat_ax is not None else 0)
+                    * stat_per)
+                k_out = (k_id if k_frame == "global" else
+                    k_id - (ki if k_ax is not None else 0) * k_per)
                 per_dev[i][j].append((r * g1 + c, stat_local, k_out))
 
     counts = np.array([[len(per_dev[i][j]) for j in range(s1)]
@@ -483,8 +483,8 @@ def _compressed_out_stationary_fn(sol, form, mesh, dtype, comp, out_spec,
     b_stat, b_k = (b0, b1) if sp_side == "lhs" else (b1, b0)
     stat_ax = sp_tp.axis_of.get("m" if sp_side == "lhs" else "n")
     f_stat = plan_mod._axis_factor(stat_ax, sol.sizes)
-    stat_blocks = (comp.d0_pad if sp_side == "lhs" else comp.d1_pad) \
-        // (b_stat * f_stat)
+    stat_blocks = ((comp.d0_pad if sp_side == "lhs" else comp.d1_pad)
+        // (b_stat * f_stat))
     # the sparse side's motion axis (k split) and the dense side's
     dn_ax = ax0 if sp_side == "lhs" else ax1
     sp_ax = ax1 if sp_side == "lhs" else ax0
@@ -655,8 +655,8 @@ def _compressed_k_spatial_fn(sol, form, mesh, dtype, comp, out_spec,
     b_stat, b_k = (b0, b1) if sp_side == "lhs" else (b1, b0)
     stat_ax = sp_tp.axis_of.get("m" if sp_side == "lhs" else "n")
     f_stat = plan_mod._axis_factor(stat_ax, sol.sizes)
-    stat_blocks = (comp.d0_pad if sp_side == "lhs" else comp.d1_pad) \
-        // (b_stat * f_stat)
+    stat_blocks = ((comp.d0_pad if sp_side == "lhs" else comp.d1_pad)
+        // (b_stat * f_stat))
     dn_tp = sol.rhs if sp_side == "lhs" else sol.lhs
     dense_spec = _spec_of(dn_tp)
     triple_specs = (P(*sol.axes, None, None, None),

@@ -200,8 +200,8 @@ def check_batched_sparse_slices() -> None:
     """Sparse batched forms skip all-zero batch slices and still match
     the masked dense oracle on the mesh."""
     sp = Sparsity((2, 2), ((0, 0), (0, 1), (2, 0)))
-    alg = algebra.get_algebra("batched_gemv", m=8, k=8, n=8) \
-        .with_sparsity(B=sp)
+    alg = (algebra.get_algebra("batched_gemv", m=8, k=8, n=8)
+        .with_sparsity(B=sp))
     acc = repro.generate(alg, interpret=True)
     form = acc.kernel.form
     assert form.batch_keep == (0, 1, 4, 5), form.batch_keep

@@ -57,8 +57,8 @@ def main() -> None:
     mesh = Mesh(np.asarray(jax.devices()[:8]).reshape(2, 4), ("x", "y"))
     sol, spec = solve_page_placement(cfg, eng.cache.layout,
                                      axes=("x", "y"), shape=(2, 4))
-    assert spec[0] in ("x", "y") and spec[1] is None and spec[2] is None, \
-        spec
+    assert spec[0] in ("x", "y") and spec[1] is None and spec[2] is None, (
+        spec)
     print(f"page placement: strategy={sol.strategy} spec={spec}")
 
     place_pools(eng.cache, mesh, spec)
@@ -84,8 +84,8 @@ def main() -> None:
     got2 = _drive(eng, prompts)
     for g, w in zip(got2, want):
         np.testing.assert_array_equal(g, w)
-    assert eng.decode_compiles == steady, \
-        (steady, eng.decode_compiles)
+    assert eng.decode_compiles == steady, (
+        (steady, eng.decode_compiles))
     print(f"insert/evict churn on the sharded engine: compiles stable "
           f"at {steady}")
     print("serve placement selftest OK")

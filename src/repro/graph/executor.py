@@ -73,15 +73,15 @@ class GraphAccelerator:
                 if p.epilogue and not p.epilogue_fused:
                     # legal-but-not-in-kernel spec: apply on the finished
                     # tensor (the cost model charged the round trip)
-                    bias = None if p.bias_edge is None else \
-                        jnp.asarray(values[p.bias_edge], jnp.float32)
+                    bias = (None if p.bias_edge is None else
+                        jnp.asarray(values[p.bias_edge], jnp.float32))
                     out = epilogue_mod.apply_epilogue(
                         out.astype(jnp.float32), p.epilogue,
                         bias=bias).astype(kern.dtype)
                 values[p.result_edge] = out
             else:
-                bias = None if len(node.inputs) == 1 else \
-                    jnp.asarray(values[node.inputs[1]], jnp.float32)
+                bias = (None if len(node.inputs) == 1 else
+                    jnp.asarray(values[node.inputs[1]], jnp.float32))
                 x = jnp.asarray(values[node.inputs[0]], jnp.float32)
                 values[node.output] = epilogue_mod.apply_epilogue(
                     x, (node.op,), bias=bias).astype(self.dtype)
@@ -144,9 +144,9 @@ def build(graph: AlgebraGraph, *,
     kernels: Dict[str, pipeline.CompiledKernel] = {}
     for name, p in plan.nodes.items():
         fused_ep = p.epilogue if p.epilogue_fused else ()
-        bias_key = bias_operand_key(p.bias_edge) \
+        bias_key = (bias_operand_key(p.bias_edge)
             if (fused_ep and p.bias_edge is not None
-                and epilogue_mod.needs_bias(fused_ep)) else None
+                and epilogue_mod.needs_bias(fused_ep)) else None)
         kernels[name] = pipeline.lower(
             p.node.algebra, p.dataflow, cfg=cfg, dtype=p.dtype,
             interpret=interpret, backend=backend, validate=validate,

@@ -205,8 +205,8 @@ class AlgebraGraph:
                                (values[e] for e in node.inputs)))
                 values[node.output] = node.algebra.reference(ins)
             else:
-                bias = values[node.inputs[1]] if len(node.inputs) == 2 \
-                    else None
+                bias = (values[node.inputs[1]] if len(node.inputs) == 2
+                    else None)
                 values[node.output] = epilogue_mod.apply_epilogue_np(
                     values[node.inputs[0]], (node.op,), bias=bias)
         return values[self.output]

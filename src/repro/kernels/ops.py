@@ -128,8 +128,8 @@ def stt_matmul(a: jax.Array, b: jax.Array, *, template: str = "output_stationary
         # (transposition symmetry)
         strip_len = ap.shape[-2] if stationary == "B" else bp.shape[-1]
         strip_bn = bn if stationary == "B" else bm
-        if _gemm.operand_stationary_strip_bytes(strip_len, strip_bn) \
-                > vmem_budget:
+        if (_gemm.operand_stationary_strip_bytes(strip_len, strip_bn)
+                > vmem_budget):
             template = "output_stationary"
     kw = dict(bm=bm, bn=bn, bk=bk, interpret=interpret,
               epilogue=epilogue, bias=bias)

@@ -9,5 +9,5 @@ from __future__ import annotations
 
 from jax.experimental.pallas import tpu as pltpu
 
-CompilerParams = getattr(pltpu, "CompilerParams", None) \
-    or getattr(pltpu, "TPUCompilerParams")
+CompilerParams = (getattr(pltpu, "CompilerParams", None)
+    or getattr(pltpu, "TPUCompilerParams"))

@@ -161,8 +161,8 @@ def ssd_ref(x: jax.Array, dt: jax.Array, a: jax.Array,
 
     def step(hprev, inp):
         xt, bt, ct, dct, dtt = inp                        # (B,H,P),(B,H,N)...
-        hnew = dct[..., None, None] * hprev + \
-            jnp.einsum("bhn,bhp->bhnp", dtt[..., None] * bt, xt)
+        hnew = (dct[..., None, None] * hprev +
+            jnp.einsum("bhn,bhp->bhnp", dtt[..., None] * bt, xt))
         yt = jnp.einsum("bhn,bhnp->bhp", ct, hnew)
         return hnew, yt
 

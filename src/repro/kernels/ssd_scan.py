@@ -41,8 +41,8 @@ def _ssd_kernel(da_ref, x_ref, b_ref, c_ref, y_ref, state_ref, *, chunk: int):
     # intra-chunk (quadratic, MXU): y[i] = sum_{j<=i} e^{lc_i-lc_j} (C_i.B_j) x_j
     s = jnp.dot(c, b.T, preferred_element_type=jnp.float32)       # (Q, Q)
     dmat = lc[:, None] - lc[None, :]
-    tri = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0) >= \
-        jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    tri = (jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0) >=
+        jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1))
     m = jnp.exp(jnp.where(tri, dmat, -1e9))   # mask before exp (see ref.py)
     y = jnp.dot(s * m, x, preferred_element_type=jnp.float32)     # (Q, P)
 

@@ -281,8 +281,8 @@ def analyze(text: str, default_group: int = 1) -> HloStats:
                 stats.hbm_bytes += 2 * res * k
             elif op.kind == "dynamic-update-slice":
                 names = _operand_names(op.rest)
-                upd = shape_bytes(table.get(names[1], "")) if len(names) > 1 \
-                    else 0
+                upd = (shape_bytes(table.get(names[1], "")) if len(names) > 1
+                    else 0)
                 stats.hbm_bytes += 2 * upd * k
             else:
                 names = _operand_names(op.rest)

@@ -140,8 +140,8 @@ def _decode_attn(q, k_cache, v_cache, *, pos, window, cache_len):
         # warm). Entries beyond pos when cold (pos < S) are invalid.
         abs_pos = pos_b - ((pos_b - slots) % s)
         valid = (abs_pos >= 0) & (abs_pos > pos_b - window)
-    valid = valid[:, None, None, :] if pos_a.ndim \
-        else valid[None, None, None, :]
+    valid = (valid[:, None, None, :] if pos_a.ndim
+        else valid[None, None, None, :])
     scores = jnp.where(valid, scores, NEG_INF)
     p = jax.nn.softmax(scores, axis=-1)
     out = jnp.einsum("bhqk,bhkd->bhqd", p, vf)
@@ -305,9 +305,9 @@ def apply_attention(p: Dict, x: jax.Array, cfg: ModelConfig, *,
                 out = chunked_attn_manual(qh, kh, vh, causal=use_causal,
                                           window=window)
             if out is None:
-                bkv = 1024 if lkv % 1024 == 0 else \
+                bkv = (1024 if lkv % 1024 == 0 else
                     next(b for b in (512, 256, 128, 64, 1)
-                         if lkv % b == 0)
+                         if lkv % b == 0))
                 out = _chunked_attn(qh, kh, vh, causal=use_causal,
                                     window=window, bkv=bkv)
         if collect_kv:

@@ -306,8 +306,8 @@ def decode_step(params: Dict, tokens: jax.Array, cache: Dict[str, Any],
 def _concat_ssm(ssm_new, n_apps, gsz, tail):
     """Stitch per-group (gsz, B, ...) ssm caches back to (L, B, ...)."""
     parts = ssm_new[:n_apps]
-    out = jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=0), *parts) \
-        if len(parts) > 1 else parts[0]
+    out = (jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=0), *parts)
+        if len(parts) > 1 else parts[0])
     if tail:
         out = jax.tree.map(lambda a, t: jnp.concatenate([a, t], axis=0),
                            out, ssm_new[-1])

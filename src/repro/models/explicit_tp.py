@@ -140,8 +140,8 @@ def qkv_manual(x: jax.Array, wq: jax.Array, wk: jax.Array, wv: jax.Array,
     if mesh is None or msize <= 1 or x.ndim != 3:
         return None
     b, s, d = x.shape
-    if s % msize or wq.shape[1] % msize or wk.shape[1] % msize \
-            or not _batch_ok(b, bd, mesh):
+    if (s % msize or wq.shape[1] % msize or wk.shape[1] % msize
+            or not _batch_ok(b, bd, mesh)):
         return None
     bspec = bd if len(bd) > 1 else (bd[0] if bd else None)
 

@@ -164,8 +164,8 @@ class PagedKVCache:
                 assert b == capacity, (path, leaf.shape, capacity)
                 if seq_len is None:
                     seq_len = s
-                assert s == seq_len, \
-                    f"paged leaves disagree on seq len: {path} {s} != {seq_len}"
+                assert s == seq_len, (
+                    f"paged leaves disagree on seq len: {path} {s} != {seq_len}")
                 paged_meta.append((path, (stack, feat,
                                           jnp.dtype(leaf.dtype).name)))
             else:
@@ -327,8 +327,8 @@ def place_pools(cache: PagedKVCache, mesh, spec) -> None:
     from jax.sharding import NamedSharding
 
     axis = spec[0]
-    n = dict(zip(mesh.axis_names, mesh.devices.shape)).get(axis, 1) \
-        if axis else 1
+    n = (dict(zip(mesh.axis_names, mesh.devices.shape)).get(axis, 1)
+        if axis else 1)
     for path, pool in cache.pools.items():
         p = pool.shape[0]
         pad = (-p) % max(n, 1)

@@ -112,8 +112,8 @@ def validate_serve(doc: Any) -> List[str]:
     cont = doc.get("continuous")
     if isinstance(cont, dict):
         occ = cont.get("mean_occupancy")
-        if isinstance(occ, _NUM) and not isinstance(occ, bool) \
-                and not (0.0 <= occ <= 1.0):
+        if (isinstance(occ, _NUM) and not isinstance(occ, bool)
+                and not (0.0 <= occ <= 1.0)):
             errors.append("continuous.mean_occupancy must be in [0, 1]")
         dc = cont.get("decode_compiles")
         if isinstance(dc, int) and not isinstance(dc, bool) and dc != 1:
@@ -161,6 +161,6 @@ def serve_entry(*, smoke: bool, arch: str, capacity: int, page_size: int,
         "parity_checked": bool(parity_checked),
     }
     st = doc["static"]["throughput_tok_s"]
-    doc["speedup"] = (doc["continuous"]["throughput_tok_s"] / st) if st \
-        else 1.0
+    doc["speedup"] = ((doc["continuous"]["throughput_tok_s"] / st) if st
+        else 1.0)
     return doc

@@ -167,8 +167,8 @@ class ContinuousServer:
         front of the queue."""
         admitted = 0
         held: List[RequestFuture] = []
-        while admitted < self.prefill_per_step \
-                and self.engine.free_slots():
+        while (admitted < self.prefill_per_step
+                and self.engine.free_slots()):
             try:
                 fut = self._queue.get_nowait()
             except queue_mod.Empty:
@@ -206,8 +206,8 @@ class ContinuousServer:
     def _finished_on(self, fut: RequestFuture, token: int, *,
                      emitted: int) -> bool:
         eos = self.engine.serve_cfg.eos_id
-        return (eos is not None and token == eos) \
-            or emitted >= fut.request.max_new_tokens
+        return ((eos is not None and token == eos)
+            or emitted >= fut.request.max_new_tokens)
 
     def _request_done(self) -> None:
         with self._inflight_lock:

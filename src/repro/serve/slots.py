@@ -144,8 +144,8 @@ class SlotEngine:
             if scfg.temperature <= 0.0:
                 return jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
             scaled = logits / scfg.temperature
-            return jax.random.categorical(key, scaled, axis=-1)[:, None] \
-                .astype(jnp.int32)
+            return (jax.random.categorical(key, scaled, axis=-1)[:, None]
+                .astype(jnp.int32))
 
         def step(params, tokens, pos, active, table, pools, lanes, key):
             views = lay.gather_views(pools, table)
@@ -184,8 +184,8 @@ class SlotEngine:
             raise ValueError(
                 f"prompt ({s0}) + max_new_tokens ({max_new_tokens}) exceeds "
                 f"max_context ({self.max_context})")
-        if self.cfg.family in ("ssm", "hybrid") \
-                and s0 < self.cfg.conv_kernel - 1:
+        if (self.cfg.family in ("ssm", "hybrid")
+                and s0 < self.cfg.conv_kernel - 1):
             # model-level floor (the sequential path shares it): the SSM
             # decode recurrence needs a full conv window from prefill
             raise ValueError(

@@ -95,8 +95,8 @@ def _load() -> Dict[str, Any]:
     except OSError:
         stat = None
     with _LOCK:
-        if _MEMO["path"] == str(path) and _MEMO["stat"] == stat \
-                and _MEMO["doc"] is not None:
+        if (_MEMO["path"] == str(path) and _MEMO["stat"] == stat
+                and _MEMO["doc"] is not None):
             return _MEMO["doc"]
     if stat is None:
         doc = _empty_doc()

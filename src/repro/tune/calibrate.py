@@ -100,8 +100,8 @@ def fit(records: List[Dict[str, Any]]) -> Calibration:
             measured = float(r["measured_cycles"])
         except (KeyError, TypeError, ValueError):
             continue
-        if model <= 0 or measured <= 0 or not math.isfinite(model) \
-                or not math.isfinite(measured):
+        if (model <= 0 or measured <= 0 or not math.isfinite(model)
+                or not math.isfinite(measured)):
             continue
         ratios.setdefault((template, algebra), []).append(measured / model)
     anchors = {pair: _clamp(_geomean(v)) for pair, v in ratios.items()}
@@ -143,8 +143,8 @@ def load_records() -> List[Dict[str, Any]]:
     if not isinstance(raw, dict) or raw.get("version") != SCHEMA_VERSION:
         return []
     recs = raw.get("records")
-    return [r for r in recs if isinstance(r, dict)] \
-        if isinstance(recs, list) else []
+    return ([r for r in recs if isinstance(r, dict)]
+        if isinstance(recs, list) else [])
 
 
 def load() -> Calibration:

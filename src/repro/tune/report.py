@@ -73,8 +73,8 @@ def validate_bench(doc: Any) -> List[str]:
             continue
         for name, typ in _CELL_REQUIRED.items():
             v = cell.get(name)
-            if v is None or not isinstance(v, typ) \
-                    or (typ is not bool and isinstance(v, bool)):
+            if (v is None or not isinstance(v, typ)
+                    or (typ is not bool and isinstance(v, bool))):
                 errors.append(f"{where}.{name} missing or wrong type")
         var = cell.get("variant")
         if isinstance(var, dict):
@@ -87,8 +87,8 @@ def validate_bench(doc: Any) -> List[str]:
                 if not isinstance(var.get(f), str):
                     errors.append(f"{where}.variant.{f} missing")
         sp = cell.get("speedup")
-        if isinstance(sp, (int, float)) and not isinstance(sp, bool) \
-                and sp <= 0:
+        if (isinstance(sp, (int, float)) and not isinstance(sp, bool)
+                and sp <= 0):
             errors.append(f"{where}.speedup must be positive")
     cal = doc.get("calibration")
     if not isinstance(cal, dict):

@@ -13,8 +13,8 @@ def run_example(name, *args, timeout=600):
     proc = subprocess.run(
         [sys.executable, os.path.join(ROOT, "examples", name), *args],
         capture_output=True, text=True, timeout=timeout, cwd=ROOT, env=env)
-    assert proc.returncode == 0, \
-        f"STDOUT:\n{proc.stdout[-2000:]}\nSTDERR:\n{proc.stderr[-2000:]}"
+    assert proc.returncode == 0, (
+        f"STDOUT:\n{proc.stdout[-2000:]}\nSTDERR:\n{proc.stderr[-2000:]}")
     return proc.stdout
 
 

@@ -153,8 +153,8 @@ class TestFusedChains:
         want = np.asarray(chains.attention_mlp_oracle(
             {k: v for k, v in ops.items()}))
         assert got.shape == want.shape
-        assert (got == want).all(), \
-            f"max err {np.abs(got - want).max():.3e}"
+        assert (got == want).all(), (
+            f"max err {np.abs(got - want).max():.3e}")
 
     def test_attention_mlp_fewer_hbm_bytes(self):
         g = chains.attention_mlp_graph(lq=32, lkv=32, d=32, dv=32, f=64)
@@ -165,8 +165,8 @@ class TestFusedChains:
         assert rep.hbm_ratio > 1.3
         # the softmax/gelu epilogues are folded into the gemm kernels
         plan = repro.generate(g).plan
-        assert plan.nodes["scores"].epilogue == \
-            (chains._scale_op(32), "softmax")
+        assert (plan.nodes["scores"].epilogue ==
+            (chains._scale_op(32), "softmax"))
         assert plan.nodes["mlp_up"].epilogue == ("bias", "gelu")
 
     def test_search_graph_returns_plan(self):

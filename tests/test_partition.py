@@ -22,8 +22,8 @@ def solved(alg, dfname="output_stationary", shape=(2, 4), **kw):
     df = stt.apply_stt(alg, alg.loops[:3], stt.stt_from_name(dfname))
     comm = comm_plan_for(df, densities={name: alg.density_of(name)
                                         for name, _ in alg.sparsity})
-    return solve_partition(comm, lower_form(alg), shape=shape, **kw), \
-        lower_form(alg)
+    return (solve_partition(comm, lower_form(alg), shape=shape, **kw),
+        lower_form(alg))
 
 
 # ---------------------------------------------------------------------------
@@ -109,8 +109,8 @@ def test_compressed_side_and_metadata_bytes():
 
 def test_batched_forms_never_compress():
     sp = Sparsity((2, 2), ((0, 0),))
-    alg = algebra.get_algebra("batched_gemv", m=8, k=8, n=8) \
-        .with_sparsity(B=sp)
+    alg = (algebra.get_algebra("batched_gemv", m=8, k=8, n=8)
+        .with_sparsity(B=sp))
     sol, form = solved(alg)
     assert not sol.lhs.compressed and not sol.rhs.compressed
 
@@ -130,8 +130,8 @@ def test_replicated_inputs_reported():
 
 def test_batched_sparse_skips_zero_slices():
     sp = Sparsity((2, 2), ((0, 0), (0, 1), (2, 0)))
-    alg = algebra.get_algebra("batched_gemv", m=8, k=8, n=8) \
-        .with_sparsity(B=sp)
+    alg = (algebra.get_algebra("batched_gemv", m=8, k=8, n=8)
+        .with_sparsity(B=sp))
     form = lower_form(alg)
     assert form.batch_keep == (0, 1, 4, 5)
     assert form.batch == (4,) and form.batch_full == (8,)
@@ -159,8 +159,8 @@ def test_batched_sparse_ratio_drops_below_dense_execution():
 
 def test_batched_sparse_dense_pattern_keeps_all_slices():
     sp = Sparsity((2, 2), tuple((i, j) for i in range(4) for j in range(4)))
-    alg = algebra.get_algebra("batched_gemv", m=8, k=8, n=8) \
-        .with_sparsity(B=sp)
+    alg = (algebra.get_algebra("batched_gemv", m=8, k=8, n=8)
+        .with_sparsity(B=sp))
     form = lower_form(alg)
     assert form.batch_keep is None and form.batch == (8,)
 

@@ -302,8 +302,8 @@ class TestCalibration:
     def test_record_persists_and_reloads(self):
         calibrate.record("output_stationary", "gemm", 1000.0, 250000.0)
         cal = calibrate.load()
-        assert cal.scale_for("output_stationary", "gemm") == \
-            pytest.approx(250.0)
+        assert (cal.scale_for("output_stationary", "gemm") ==
+            pytest.approx(250.0))
         # re-recording the same pair replaces, not dilutes
         calibrate.record("output_stationary", "gemm", 1000.0, 500000.0)
         assert calibrate.load().scale_for(
