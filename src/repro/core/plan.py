@@ -365,8 +365,7 @@ class PartitionSolution:
             out[tp.side] = e * (tp.density if tp.compressed else 1.0)
         return out
 
-    def per_device_bytes(self, form, elem_bytes: int = 4
-                         ) -> Dict[str, float]:
+    def per_device_bytes(self, form, elem_bytes: int = 4) -> Dict[str, float]:
         """Stored bytes per device per side, incl. block-COO metadata for
         compressed sides (two int32 coords per nonzero block)."""
         ext = self._extents(form)
@@ -375,8 +374,10 @@ class PartitionSolution:
             dense = self._side_elems(tp, ext)
             if tp.compressed and form.sparse is not None:
                 be = form.sparse.block[0] * form.sparse.block[1]
-                b = (dense * tp.density * elem_bytes
-                    + (dense * tp.density / be) * 2 * INDEX_BYTES)
+                b = (
+                    dense * tp.density * elem_bytes
+                    + (dense * tp.density / be) * 2 * INDEX_BYTES
+                )
             else:
                 b = dense * elem_bytes
             out[tp.side] = b
@@ -461,8 +462,9 @@ def solve_partition(comm: CommPlan, form, axes: Tuple[str, str] = ("x", "y"),
     sparse_side = form.sparse.side if form.sparse is not None else None
     if compressed is None:
         compressed = sparse_side is not None
-    compressed = (bool(compressed) and sparse_side is not None
-        and not form.batch)
+    compressed = (
+        bool(compressed) and sparse_side is not None and not form.batch
+    )
     notes = []
 
     def dens(tensors: FrozenSet[str]) -> float:
@@ -521,17 +523,20 @@ def _solve_out_stationary(comm, form, axes, sizes, lhs_kind, rhs_kind,
     # per-side motion: lhs moves along ax1 (its reuse spans n), rhs along
     # ax0.  A batched side whose batch shard occupies its motion axis
     # cannot also split k there: it degrades to resident full k.
-    lhs_motion = (lhs_kind if lhs_kind in ("all_gather", "ppermute_ring")
-        else None)
-    rhs_motion = (rhs_kind if rhs_kind in ("all_gather", "ppermute_ring")
-        else None)
+    lhs_motion = (
+        lhs_kind if lhs_kind in ("all_gather", "ppermute_ring") else None
+    )
+    rhs_motion = (
+        rhs_kind if rhs_kind in ("all_gather", "ppermute_ring") else None
+    )
     if batched and rb and rhs_motion is not None:
         rhs_motion = None
         notes.append("rhs k-motion degraded to resident: batch shard "
                      f"occupies {ax0}")
 
-    double_ring = (lhs_motion == "ppermute_ring"
-        and rhs_motion == "ppermute_ring")
+    double_ring = (
+        lhs_motion == "ppermute_ring" and rhs_motion == "ppermute_ring"
+    )
     if double_ring and (not square or
                         (compressed and sparse_side is not None)):
         # Cannon needs equal ring lengths (and skewed dense k-blocks,
@@ -630,8 +635,12 @@ def _solve_k_spatial(comm, form, axes, sizes, lhs_kind, rhs_kind, out_tp,
     # the fully-partitioned ("shard"/"stream") input also splits its non-k
     # dim over the remaining axis; batch takes that axis when present, and
     # a staggered output chunks m over the ring axis instead
-    shard_m = (other is not None and not batched
-        and lhs_kind in ("shard", "stream") and not stagger)
+    shard_m = (
+        other is not None
+        and not batched
+        and lhs_kind in ("shard", "stream")
+        and not stagger
+    )
     shard_n = other is not None and not batched and not shard_m
 
     grid = {"b": other if batched else None,
@@ -660,8 +669,11 @@ def _solve_k_spatial(comm, form, axes, sizes, lhs_kind, rhs_kind, out_tp,
 
     macs_split = math.prod(_axis_factor(grid[d], sizes)
                            for d in ("b", "m", "n", "k"))
-    strategy = ("k_spatial_stagger" if stagger else
-        ("k_spatial_ring" if ring else "k_spatial"))
+    strategy = (
+        "k_spatial_stagger"
+        if stagger
+        else ("k_spatial_ring" if ring else "k_spatial")
+    )
     return PartitionSolution(
         strategy, axes, (sizes[ax0], sizes[ax1]), grid, lhs, rhs, out,
         batch_axis=grid["b"], ring_axes=k_axes if ring else (),

@@ -133,16 +133,22 @@ class GraphPlan:
 
     def describe(self) -> str:
         rep = self.cost_report()
-        lines = [f"GraphPlan(group={self.group!r}, dtype={self.dtype}, "
-                 f"mesh={self.mesh_shape})"]
+        lines = [
+            f"GraphPlan(group={self.group!r}, dtype={self.dtype}, "
+            f"mesh={self.mesh_shape})"
+        ]
         for name, p in self.nodes.items():
-            ep = (f" epilogue={list(p.epilogue)}"
-                 f"{'' if p.epilogue_fused else ' (unfused)'}"
-                if p.epilogue else "")
+            ep = (
+                f" epilogue={list(p.epilogue)}"
+                f"{'' if p.epilogue_fused else ' (unfused)'}"
+                if p.epilogue
+                else ""
+            )
             lines.append(
                 f"  {name}: {p.node.algebra.name} df={p.dataflow.name} "
                 f"template={p.template} blocks={p.blocks}{ep} "
-                f"-> {p.result_edge}")
+                f"-> {p.result_edge}"
+            )
         for e in self.edges:
             if e.producer is None:
                 continue
@@ -339,8 +345,11 @@ def _price(plan: GraphPlan, assume_unfused: bool = False
     materialized: List[Tuple[str, str]] = []
     # reads: one per consumed edge instance unless the edge fuses
     for e in plan.edges:
-        dtype = (plan.nodes[e.consumer].dtype if e.consumer in plan.nodes
-            else plan.dtype)
+        dtype = (
+            plan.nodes[e.consumer].dtype
+            if e.consumer in plan.nodes
+            else plan.dtype
+        )
         if e.fused and not assume_unfused:
             fused_edges.append(f"{e.producer}->{e.consumer}:{e.edge}")
             continue
@@ -355,8 +364,11 @@ def _price(plan: GraphPlan, assume_unfused: bool = False
     # writes: a produced edge hits HBM unless every consumer fused it
     for name, p in plan.nodes.items():
         consumers = [e for e in plan.edges if e.producer == name]
-        all_fused = (consumers and all(e.fused for e in consumers)
-            and not assume_unfused)
+        all_fused = (
+            consumers
+            and all(e.fused for e in consumers)
+            and not assume_unfused
+        )
         if p.result_edge == graph.output or not all_fused:
             charge(p.result_edge, size_bytes(p.result_edge, p.dtype))
         if p.epilogue and (assume_unfused or not p.epilogue_fused):
@@ -409,8 +421,12 @@ def plan_graph(graph: AlgebraGraph, *,
     mesh_shape = None if mesh is None else dse._mesh_shape(mesh)
     folds = _fold_epilogues(graph)
     model = PaperCycleModel(cfg)
-    group = ("g:" + "|".join(n.name for n in graph.topo_nodes)
-        + "->" + graph.output)
+    group = (
+        "g:"
+        + "|".join(n.name for n in graph.topo_nodes)
+        + "->"
+        + graph.output
+    )
 
     plans: "Dict[str, NodePlan]" = {}
     result_owner: Dict[str, str] = {}   # result edge -> planned node name
@@ -424,8 +440,11 @@ def plan_graph(graph: AlgebraGraph, *,
         node_dtype = node.dtype or dtype
         form = lower_form(alg)
         epilogue = fold["epilogue"]
-        ep_reason = (pipeline._epilogue_legal_for_form(alg, form, epilogue)
-            if epilogue else None)
+        ep_reason = (
+            pipeline._epilogue_legal_for_form(alg, form, epilogue)
+            if epilogue
+            else None
+        )
         epilogue_fused = bool(epilogue) and ep_reason is None
 
         if search:
@@ -486,11 +505,16 @@ def plan_graph(graph: AlgebraGraph, *,
                 why = _partition_agrees(plans[owner], df, form,
                                         axes, mesh_shape)
                 if why is not None:
-                    reshard_b = (float(np.prod(graph.edge_shape(edge)))
-                        * _elem_bytes(node_dtype))
-            nbytes = (0.0 if why is None
+                    reshard_b = (
+                        float(np.prod(graph.edge_shape(edge)))
+                        * _elem_bytes(node_dtype)
+                    )
+            nbytes = (
+                0.0
+                if why is None
                 else float(np.prod(graph.edge_shape(edge)))
-                * _elem_bytes(node_dtype))
+                * _elem_bytes(node_dtype)
+            )
             decisions.append(EdgeDecision(
                 edge=edge, producer=owner, consumer=node.name,
                 fused=why is None, reason=why or "", bytes_hbm=nbytes,
