@@ -11,9 +11,13 @@ job when a performance ratio regresses below its floor:
     pick must never lose to its own untuned baseline),
   * BENCH_serve.json — schema ``repro.serve.report.validate_serve``;
     continuous-vs-static throughput >= SERVE_SPEEDUP_FLOOR,
-  * BENCH_graph.json — fused-vs-unfused HBM ratio >= the floor recorded
-    in the document (``benchmarks.graph_fusion.HBM_RATIO_FLOOR``) and
-    bit parity with the explicit-schedule oracle.
+  * BENCH_graph.json — schema v2: fused-vs-unfused HBM ratio >= the
+    modeled floor recorded in the document
+    (``benchmarks.graph_fusion.HBM_RATIO_FLOOR``), *measured*
+    merged-vs-sequential wall-clock speedup >= the document's
+    ``measured_floor`` (``MEASURED_SPEEDUP_FLOOR``, >= 1.2), and bit
+    parity with both the explicit-schedule oracle and sequential
+    dispatch.
 
 The emitting benchmarks enforce their own gates too; this checker is
 the belt to their suspenders — it catches a stale or hand-edited
@@ -70,11 +74,20 @@ def check(problems: list) -> None:
     graph = _load("BENCH_graph.json", problems)
     if graph is not None:
         floor = graph.get("floor")
+        mfloor = graph.get("measured_floor")
         chains = graph.get("chains")
-        if (not isinstance(floor, (int, float))
+        if graph.get("version") != 2:
+            problems.append(f"BENCH_graph.json: schema version "
+                            f"{graph.get('version')!r} != 2 (stale "
+                            f"artifact? re-run benchmarks.graph_fusion)")
+        elif (not isinstance(floor, (int, float))
+                or not isinstance(mfloor, (int, float))
                 or not isinstance(chains, list) or not chains):
             problems.append("BENCH_graph.json: needs numeric 'floor' and "
-                            "non-empty 'chains'")
+                            "'measured_floor' and non-empty 'chains'")
+        elif mfloor < 1.2:
+            problems.append(f"BENCH_graph.json: measured_floor {mfloor} "
+                            f"< 1.2 (the gate must not be weakened)")
         else:
             for row in chains:
                 ratio = row.get("hbm_ratio")
@@ -82,10 +95,24 @@ def check(problems: list) -> None:
                     problems.append(
                         f"BENCH_graph.json: {row.get('shape')} hbm_ratio "
                         f"{ratio} < floor {floor}")
+                speedup = row.get("measured_speedup")
+                if (not isinstance(speedup, (int, float))
+                        or speedup < mfloor):
+                    problems.append(
+                        f"BENCH_graph.json: {row.get('shape')} "
+                        f"measured_speedup {speedup} < floor {mfloor}")
+                if not row.get("merged_groups"):
+                    problems.append(
+                        f"BENCH_graph.json: {row.get('shape')} has no "
+                        f"merged group (megakernel path not exercised)")
                 if row.get("bit_parity") is not True:
                     problems.append(
                         f"BENCH_graph.json: {row.get('shape')} lost bit "
                         f"parity vs the explicit-schedule oracle")
+                if row.get("bit_parity_sequential") is not True:
+                    problems.append(
+                        f"BENCH_graph.json: {row.get('shape')} merged "
+                        f"kernel lost bit parity vs sequential dispatch")
 
 
 def main() -> None:

@@ -309,29 +309,39 @@ def generate(alg: Union[TensorAlgebra, str],
     :class:`~repro.graph.ir.AlgebraGraph`, a
     :class:`~repro.graph.executor.GraphAccelerator`: the whole DAG is
     planned (``repro.graph.planner``: epilogue folding, per-node
-    dataflow selection, inter-node tile agreement), every node lowers
-    through this same pipeline, and ``__call__`` runs the chain with at
-    most one HBM materialization per non-fusable edge.  For graphs,
-    ``search`` is the per-node DSE width (int) and ``dataflow`` /
-    ``tune`` / ``bounds`` / ``sparsity`` / ``mesh`` do not apply.
+    dataflow selection, inter-node tile agreement, merged-group
+    derivation), every node lowers through this same pipeline, and
+    ``__call__`` runs the chain with at most one HBM materialization
+    per non-fusable edge — merged-eligible fused chains execute as a
+    single Pallas megakernel with intermediates in VMEM scratch.  For
+    graphs, ``search`` is the per-node DSE width (int), ``tune=k``
+    measures each merged group against sequential dispatch (m-block
+    ladder x stage interleave, at most ``k`` trials per group) and
+    keeps the winner, and ``dataflow`` / ``bounds`` / ``sparsity`` /
+    ``mesh`` do not apply.
     """
     from .graph.ir import AlgebraGraph as _AlgebraGraph
     if isinstance(alg, _AlgebraGraph):
-        if dataflow is not None or tune or bounds or sparsity:
+        if dataflow is not None or bounds or sparsity:
             raise ValueError(
                 "graph generation plans per-node dataflows itself: "
-                "dataflow=/tune=/bounds=/sparsity= do not apply; use "
-                "search= for the per-node DSE width")
+                "dataflow=/bounds=/sparsity= do not apply; use search= "
+                "for the per-node DSE width and tune= for merged-group "
+                "measurement")
         if search is not None and not isinstance(search, int):
             raise ValueError("for a graph, search= must be an int "
                              "(per-node DSE width)")
         from .graph import executor as _graph_exec
         if interpret is None:
             interpret = jax.default_backend() != "tpu"
+        group_trials = None
+        if tune:
+            group_trials = (tune if isinstance(tune, int)
+                and not isinstance(tune, bool) else 8)
         return _graph_exec.build(
             alg, search=search, cfg=cfg, dtype=dtype,
             interpret=interpret, backend=backend, validate=validate,
-            mesh=mesh)
+            mesh=mesh, tune=group_trials)
     algebra = _resolve_algebra(alg, bounds)
     if sparsity:
         algebra = algebra.with_sparsity(**sparsity)

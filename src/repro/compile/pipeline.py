@@ -41,6 +41,7 @@ from ..core.costmodel import CostReport, PaperCycleModel
 from ..core.stt import Dataflow
 from ..core.tiling import ArrayConfig
 from ..kernels import epilogue as epilogue_mod
+from ..kernels import fused_chain as fused_chain_mod
 from ..kernels import ops
 from .lowering import LoweredForm, lower_form
 
@@ -455,6 +456,214 @@ def lower(alg: TensorAlgebra, df: Optional[Dataflow] = None, *,
         if prior is not None:
             # a concurrent lower built the same kernel first; keep the
             # cached one so callers always share a single object per key
+            _CACHE.move_to_end(key)
+            return prior
+        _CACHE[key] = kernel
+        while len(_CACHE) > _CAPACITY:
+            _CACHE.popitem(last=False)
+            _STATS["evictions"] += 1
+    return kernel
+
+
+# ---------------------------------------------------------------------------
+# Merged fused-group lowering — one CompiledGroupKernel per chain
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class CompiledGroupKernel:
+    """An entire fused graph group lowered to ONE Pallas kernel.
+
+    ``__call__(lhs, rhss, biases)`` takes the group's external operands
+    in *storage* layout (gemm weights are ``(n, k)``; the transpose the
+    per-node ``prepare`` would apply happens here) and returns the
+    group's result edge — every intermediate stays in VMEM scratch
+    inside the single ``pallas_call`` (``kernels/fused_chain.py``).
+    """
+
+    group: str                          # FusedGroupPlan.name
+    stages: Tuple[str, ...]             # member node names (labels)
+    chain: Tuple[fused_chain_mod.ChainStage, ...]
+    m: int
+    k0: int
+    bm: int                             # m-block (grid phases)
+    interleave: str                     # "chain" | "stage"
+    cfg: ArrayConfig
+    dtype: jnp.dtype
+    interpret: bool
+    backend: str
+    #: where bm/interleave came from: "analytical" (the plan's agreed
+    #: blocks) or "tuned" (the on-disk group tuning cache)
+    source: str = "analytical"
+    #: merged / sequential medians when the group tuner measured them
+    measured_s: Optional[float] = None
+    sequential_s: Optional[float] = None
+    validated: bool = False
+    #: the jitted end-to-end entry (casts + transposes + megakernel in
+    #: ONE dispatch — per-call eager ops would cost more than the merge
+    #: saves); built lazily on first call
+    _fn: Optional[object] = dataclasses.field(
+        default=None, repr=False, compare=False)
+
+    def total_macs(self) -> int:
+        return sum(self.m * st.k * st.n for st in self.chain)
+
+    def _build_fn(self):
+        stages, dtype = self.chain, self.dtype
+        bm, interleave = self.bm, self.interleave
+        out_name, interpret = dtype.name, self.interpret
+        xla = self.backend == "xla"
+
+        @jax.jit
+        def fn(lhs, rhss, biases):
+            lhs = lhs.astype(dtype)
+            # gemm stores B as (n, k); the merged template wants (k, n)
+            rhs_kn = tuple(r.astype(dtype).T for r in rhss)
+            rows = tuple(b.astype(jnp.float32).reshape(-1) for b in biases)
+            if xla:
+                return fused_chain_mod.chain_reference(
+                    lhs, *rhs_kn, *(r.reshape(1, -1) for r in rows),
+                    stages=stages, out_dtype=out_name)
+            return fused_chain_mod.fused_chain_matmul(
+                lhs, rhs_kn, rows, stages=stages, bm=bm,
+                interleave=interleave, out_dtype=dtype,
+                interpret=interpret)
+
+        return fn
+
+    def __call__(self, lhs: jax.Array, rhss: Sequence[jax.Array],
+                 biases: Sequence[jax.Array] = ()) -> jax.Array:
+        if self._fn is None:
+            self._fn = self._build_fn()
+        return self._fn(jnp.asarray(lhs),
+                        tuple(jnp.asarray(r) for r in rhss),
+                        tuple(jnp.asarray(b) for b in biases))
+
+    def validate(self, seed: int = 0, atol: float = 1e-3,
+                 rtol: Optional[float] = None) -> float:
+        """Run on random integer operands and compare against the fp64
+        numpy chain oracle (dot + ``apply_epilogue_np`` per stage).
+        ``rtol`` scales with the output magnitude (a chain compounds
+        rounding); defaults per dtype."""
+        if rtol is None:
+            rtol = 1e-5 if self.dtype == jnp.float32 else 2e-2
+        rng = np.random.default_rng(seed)
+        lhs = rng.integers(-4, 5, size=(self.m, self.k0))
+        rhss = [rng.integers(-4, 5, size=(st.n, st.k))
+                for st in self.chain]
+        biases = [rng.integers(-4, 5, size=(st.n,))
+                  for st in self.chain if st.has_bias]
+        got = np.asarray(self(lhs, rhss, biases), dtype=np.float64)
+        x = lhs.astype(np.float64)
+        bi = 0
+        for st, r in zip(self.chain, rhss):
+            x = x @ r.T.astype(np.float64)
+            if st.epilogue:
+                b = None
+                if st.has_bias:
+                    b = biases[bi].astype(np.float64)
+                    bi += 1
+                x = epilogue_mod.apply_epilogue_np(x, st.epilogue, bias=b)
+        want = x
+        err = float(np.abs(got - want).max()) if got.size else 0.0
+        bound = atol + rtol * (float(np.abs(want).max()) if want.size
+                               else 0.0)
+        if got.shape != want.shape or err > bound:
+            raise AssertionError(
+                f"merged group {self.group} diverged from the chain "
+                f"oracle: shape {got.shape} vs {want.shape}, max err "
+                f"{err:.3e} (bound {bound:.3e})")
+        self.validated = True
+        return err
+
+
+def _group_cache_key(plan, group, interpret: bool, backend: str) -> Tuple:
+    """The merged-kernel compile/tune-cache identity: ``_cache_key``'s
+    per-node components *extended with the stage list* — each stage
+    contributes its algebra, dataflow identity, epilogue spec and bias
+    presence, in chain order — plus the shared config/dtype/backend.
+    Two graphs whose fused chains are structurally identical share the
+    entry regardless of node or edge naming."""
+    stage_ids = []
+    for name in group.stages:
+        p = plan.nodes[name]
+        stage_ids.append((p.node.algebra, p.dataflow.selected,
+                          p.dataflow.T, p.dataflow.signature,
+                          p.epilogue, p.bias_edge is not None))
+    return ("fused_chain", tuple(stage_ids), plan.cfg, str(plan.dtype),
+            bool(interpret), str(backend))
+
+
+def _group_variant_key(key: Tuple, bm: int, interleave: str) -> Tuple:
+    return key + (int(bm), str(interleave))
+
+
+def lower_group(plan, group, *, interpret: bool = False,
+                backend: str = "pallas",
+                validate: Optional[bool] = None,
+                bm: Optional[int] = None,
+                interleave: Optional[str] = None,
+                tuned: Optional[bool] = None
+                ) -> Optional[CompiledGroupKernel]:
+    """Lower a :class:`~repro.graph.planner.FusedGroupPlan` to a single
+    cached :class:`CompiledGroupKernel` (one ``pallas_call`` for the
+    whole chain).
+
+    ``bm`` / ``interleave`` override the plan's agreed m-block and the
+    default stage order (the merged-kernel tuner's knobs).  When neither
+    is given and ``tuned`` is not False, the on-disk group tuning cache
+    is consulted first: a persisted winner supplies the knobs — and a
+    persisted *sequential* verdict makes this return ``None``, telling
+    the executor to keep per-node dispatch (the tuner measured merged
+    slower on this machine).
+    """
+    if not group.eligible:
+        raise ValueError(f"group {group.name} is not merged-eligible: "
+                         f"{group.reason}")
+    key = _group_cache_key(plan, group, interpret, backend)
+    source, measured_s, sequential_s = "analytical", None, None
+    if bm is None and interleave is None and tuned is not False:
+        from ..tune import cache as tune_cache
+        entry = tune_cache.lookup_group(tune_cache.key_of(key))
+        if entry is not None:
+            if not entry["merged"]:
+                return None             # measured verdict: keep sequential
+            bm = int(entry["bm"])
+            interleave = entry["interleave"]
+            source = "tuned"
+            measured_s = entry.get("merged_s")
+            sequential_s = entry.get("sequential_s")
+    bm = group.bm if bm is None else bm
+    interleave = "chain" if interleave is None else interleave
+    if interleave not in fused_chain_mod.FUSED_INTERLEAVES:
+        raise ValueError(f"interleave must be one of "
+                         f"{fused_chain_mod.FUSED_INTERLEAVES}, "
+                         f"got {interleave!r}")
+    key = _group_variant_key(key, bm, interleave)
+    with _CACHE_LOCK:
+        hit = _CACHE.get(key)
+        if hit is not None:
+            _STATS["hits"] += 1
+            _CACHE.move_to_end(key)
+        else:
+            _STATS["misses"] += 1
+    if hit is not None:
+        if not hit.validated and (
+                validate or (validate is None
+                             and hit.total_macs() <= VALIDATE_MACS_LIMIT)):
+            hit.validate()
+        return hit
+    kernel = CompiledGroupKernel(
+        group=group.name, stages=tuple(group.stages), chain=group.chain,
+        m=group.m, k0=group.k0, bm=bm, interleave=interleave,
+        cfg=plan.cfg, dtype=jnp.dtype(plan.dtype), interpret=interpret,
+        backend=backend, source=source, measured_s=measured_s,
+        sequential_s=sequential_s)
+    if validate or (validate is None
+                    and kernel.total_macs() <= VALIDATE_MACS_LIMIT):
+        kernel.validate()
+    with _CACHE_LOCK:
+        prior = _CACHE.get(key)
+        if prior is not None:
             _CACHE.move_to_end(key)
             return prior
         _CACHE[key] = kernel

@@ -12,7 +12,7 @@ to a DAG of them (attention = gemm·softmax·gemm, MLP = gemm·gelu·gemm):
 """
 from .executor import GraphAccelerator
 from .ir import AlgebraGraph, GraphNode
-from .planner import GraphPlan, plan_graph
+from .planner import FusedGroupPlan, GraphPlan, plan_graph
 
-__all__ = ["AlgebraGraph", "GraphNode", "GraphAccelerator", "GraphPlan",
-           "plan_graph"]
+__all__ = ["AlgebraGraph", "GraphNode", "GraphAccelerator",
+           "FusedGroupPlan", "GraphPlan", "plan_graph"]

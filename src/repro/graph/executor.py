@@ -1,20 +1,24 @@
 """GraphAccelerator — the fused executable ``repro.generate(graph)``
 returns.
 
-Realization note (documented deviation, same spirit as DESIGN.md D2):
-the generated artifact executes the planned graph as a sequence of
-Pallas kernel dispatches — a fused edge means the producer kernel was
-*scheduled* so its output block agrees with the consumer's input block
-(folded epilogue, whole-tensor or common-divisor tiles), and the cost
-model prices that edge at zero HBM traffic.  The JAX arrays that carry
-values between dispatches are XLA's realization of the VMEM residency
-the schedule guarantees; the HBM accounting in ``cost_report()`` is the
-model's (paper's) view of the same schedule.
+Since ISSUE 9 a fused chain of gemm nodes no longer *relies* on XLA to
+keep intermediates resident: every merged-eligible group in
+``plan.groups`` lowers to ONE Pallas kernel
+(``compile.pipeline.lower_group`` -> ``kernels/fused_chain.py``) whose
+intermediates live in VMEM scratch, and ``__call__`` dispatches that
+single kernel at the group's last stage instead of one ``pallas_call``
+per member node.  Nodes outside any merged group — and every node of a
+group that planned ineligible (VMEM overflow, non-gemm stage) or whose
+tuned verdict says sequential wins — keep the PR 8 behavior: one
+dispatch per node, fused edges realized as scheduled block agreement
+plus XLA value residency (documented deviation, same spirit as
+DESIGN.md D2).  The HBM accounting in ``cost_report()`` is the model's
+(paper's) view of the same schedule either way.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Mapping, Optional
+from typing import Any, Dict, Mapping, Optional
 
 import jax
 import jax.numpy as jnp
@@ -27,10 +31,43 @@ from .ir import AlgebraGraph
 from .planner import GraphPlan, plan_graph
 
 
+#: reserved operand-key prefix; ``build()`` rejects graphs whose tensor
+#: or edge names use it (a collision would silently shadow the operand)
+BIAS_KEY_PREFIX = "bias:"
+
+
 def bias_operand_key(edge: str) -> str:
     """Operand-dict key a fused bias vector rides under (prefixed so it
     can never collide with an algebra tensor name)."""
-    return f"bias:{edge}"
+    return f"{BIAS_KEY_PREFIX}{edge}"
+
+
+def _check_bias_namespace(graph: AlgebraGraph) -> None:
+    """Reject names inside the reserved ``bias:`` operand namespace.
+
+    The executor injects fused bias vectors into each kernel's operand
+    dict under ``bias_operand_key(edge)``; a user tensor or edge named
+    inside that prefix would silently shadow (or be shadowed by) the
+    injected operand.  Caught at build time instead (ISSUE 9 bugfix).
+    """
+    offenders = []
+    for e in graph.inputs:
+        if e.startswith(BIAS_KEY_PREFIX):
+            offenders.append(f"graph input edge {e!r}")
+    for node in graph.topo_nodes:
+        if node.output.startswith(BIAS_KEY_PREFIX):
+            offenders.append(f"edge {node.output!r} (node {node.name})")
+        if node.algebra is not None:
+            for t in (*node.algebra.inputs, node.algebra.output):
+                if t.name.startswith(BIAS_KEY_PREFIX):
+                    offenders.append(
+                        f"tensor {t.name!r} (node {node.name})")
+    if offenders:
+        raise ValueError(
+            f"name(s) collide with the reserved {BIAS_KEY_PREFIX!r} "
+            f"operand-key prefix: {', '.join(sorted(set(offenders)))}; "
+            f"rename them — the executor uses that namespace to route "
+            f"fused bias vectors into kernels")
 
 
 @dataclasses.dataclass
@@ -41,11 +78,22 @@ class GraphAccelerator:
     graph output, running each planned node's compiled kernel once (a
     diamond fan-out reuses the memoized edge value — producers are never
     re-computed) with folded epilogues applied inside the kernels.
+    Nodes belonging to a merged group (``group_kernels``) do not
+    dispatch individually: the whole chain runs as one Pallas kernel at
+    the group's last stage, intermediates never leaving VMEM.
     """
 
     graph: AlgebraGraph
     plan: GraphPlan
     kernels: Dict[str, pipeline.CompiledKernel]
+    #: group name -> merged megakernel; populated only for eligible
+    #: groups that actually merged (lowering may decline when a tuned
+    #: verdict says sequential dispatch wins)
+    group_kernels: Dict[str, pipeline.CompiledGroupKernel] = (
+        dataclasses.field(default_factory=dict))
+    #: group name -> tuner verdict (``tune_group`` result) when built
+    #: with ``tune=``; benchmark/report introspection only
+    group_tuning: Dict[str, Any] = dataclasses.field(default_factory=dict)
     validated: bool = False
 
     @property
@@ -59,9 +107,25 @@ class GraphAccelerator:
         values: Dict[str, jax.Array] = {
             e: jnp.asarray(operands[e]) for e in self.graph.inputs}
         folded = {n for p in self.plan.nodes.values() for n in p.folded}
+        merged = {g.name: g for g in self.plan.groups
+                  if g.name in self.group_kernels}
+        member_of = {s: g for g in merged.values() for s in g.stages}
         for node in self.graph.topo_nodes:
             if node.name in folded:
                 continue                 # runs inside its producer kernel
+            g = member_of.get(node.name)
+            if g is not None:
+                if node.name != g.stages[-1]:
+                    continue             # runs inside the merged kernel
+                # last stage: every external operand (lhs, per-stage
+                # weights, biases) is topologically ready — fire the
+                # whole chain as one pallas_call
+                gk = self.group_kernels[g.name]
+                values[g.result_edge] = gk(
+                    values[g.lhs_edge],
+                    [values[e] for e in g.rhs_edges],
+                    [values[e] for e in g.bias_edges if e is not None])
+                continue
             if node.algebra is not None:
                 p = self.plan.nodes[node.name]
                 kern = self.kernels[node.name]
@@ -114,7 +178,12 @@ class GraphAccelerator:
         return err
 
     def describe(self) -> str:
-        return self.plan.describe()
+        lines = [self.plan.describe()]
+        for name, gk in self.group_kernels.items():
+            lines.append(
+                f"  merged {name}: one pallas_call, bm={gk.bm} "
+                f"interleave={gk.interleave} ({gk.source})")
+        return "\n".join(lines)
 
 
 def build(graph: AlgebraGraph, *,
@@ -123,19 +192,29 @@ def build(graph: AlgebraGraph, *,
           cfg=None, dtype=jnp.float32,
           interpret: bool = False, backend: str = "pallas",
           validate: Optional[bool] = None,
-          mesh=None) -> GraphAccelerator:
+          mesh=None, merge: bool = True,
+          tune: Optional[int] = None) -> GraphAccelerator:
     """Plan (unless a plan is given) and lower a graph to an executable.
 
     Each node lowers through the one compile pipeline (``pipeline.lower``)
     with the plan's agreed blocks, folded epilogue spec and fused-group
     tag; an unconstrained node lowers with none of them and therefore
     shares the standalone ``generate(alg)`` cache entry bit-for-bit.
+
+    ``merge=True`` (default) additionally lowers every merged-eligible
+    fused group to a single megakernel (``pipeline.lower_group``);
+    ``merge=False`` forces PR 8 sequential per-node dispatch — the
+    merged kernels' measured baseline.  ``tune=k`` measures merged
+    variants (m-block ladder x interleave, at most ``k`` trials per
+    group) against sequential dispatch and keeps whichever wins,
+    persisting the verdict in the on-disk tuning cache.
     """
     if mesh is not None:
         raise ValueError(
             "graph execution on a mesh is not wired yet: pass mesh= to "
             "plan_graph/search_graph for partition-agreement pricing, "
             "and shard the per-node accelerators individually")
+    _check_bias_namespace(graph)
     from ..core.costmodel import ArrayConfig
     cfg = cfg if cfg is not None else ArrayConfig()
     if plan is None:
@@ -153,4 +232,26 @@ def build(graph: AlgebraGraph, *,
             blocks=p.blocks if p.blocks_constrained else None,
             epilogue=fused_ep, bias_tensor=bias_key,
             fused_group=plan.fused_group_for(name))
-    return GraphAccelerator(graph=graph, plan=plan, kernels=kernels)
+    group_kernels: Dict[str, pipeline.CompiledGroupKernel] = {}
+    group_tuning: Dict[str, Any] = {}
+    if merge:
+        for g in plan.groups:
+            if not g.eligible:
+                continue                 # planner fallback: sequential
+            if tune:
+                from ..tune import tuner as tuner_mod
+                res = tuner_mod.tune_group(
+                    plan, g, interpret=interpret, backend=backend,
+                    max_trials=tune)
+                group_tuning[g.name] = res
+                if res.merged and res.kernel is not None:
+                    group_kernels[g.name] = res.kernel
+                continue
+            gk = pipeline.lower_group(
+                plan, g, interpret=interpret, backend=backend,
+                validate=validate)
+            if gk is not None:          # None: tuned sequential verdict
+                group_kernels[g.name] = gk
+    return GraphAccelerator(graph=graph, plan=plan, kernels=kernels,
+                            group_kernels=group_kernels,
+                            group_tuning=group_tuning)

@@ -37,6 +37,15 @@ into a :class:`GraphPlan` in four passes:
    pay a write plus a read per unfused consumer, fused edges pay
    nothing, and the same plan re-priced with fusion disabled gives the
    ``hbm_bytes_unfused`` baseline.
+
+A final pass (3b) walks the fused edges into maximal sole-consumer gemm
+chains and emits one :class:`FusedGroupPlan` per chain — the schedule
+of the merged Pallas megakernel (``kernels/fused_chain.py``) that runs
+the whole chain as ONE ``pallas_call`` with intermediates in VMEM
+scratch.  Each group carries a VMEM-budget verdict: when the scratch
+strip exceeds ``_vmem_resident_limit`` (or total residency exceeds the
+budget) the group is marked ineligible and the executor dispatches the
+chain sequentially instead.
 """
 from __future__ import annotations
 
@@ -53,6 +62,7 @@ from ..core.costmodel import (ArrayConfig, CostReport, GraphCostReport,
                               HBM_BYTES_PER_CYCLE, PaperCycleModel)
 from ..core.stt import Dataflow
 from ..kernels import epilogue as epilogue_mod
+from ..kernels import fused_chain as fused_chain_mod
 from .ir import AlgebraGraph, GraphNode
 
 
@@ -97,6 +107,31 @@ class EdgeDecision:
 
 
 @dataclasses.dataclass
+class FusedGroupPlan:
+    """A chain of fused gemm nodes the executor may run as ONE merged
+    Pallas kernel (``kernels/fused_chain.py``): stage order, per-stage
+    chain specs (k/n/epilogue/bias), the agreed m-block, and the VMEM
+    verdict.  ``eligible=False`` keeps the group as documentation of
+    why the executor falls back to sequential dispatch."""
+
+    name: str                           # group id ("mg:<s0>+<s1>+...")
+    stages: Tuple[str, ...]             # algebra node names, chain order
+    lhs_edge: str                       # external (m, k0) input edge
+    rhs_edges: Tuple[str, ...]          # per-stage weight edge ((n, k))
+    bias_edges: Tuple[Optional[str], ...]   # per-stage bias edge or None
+    chain: Tuple[fused_chain_mod.ChainStage, ...]
+    m: int
+    k0: int
+    bm: int                             # agreed m-block (grid phases)
+    dtype: str
+    result_edge: str                    # the one edge the group yields
+    scratch_bytes: int                  # intermediate strip at bm
+    vmem_bytes: int                     # total residency estimate
+    eligible: bool
+    reason: str = ""                    # why not eligible ("" when it is)
+
+
+@dataclasses.dataclass
 class GraphPlan:
     """plan_graph's result: per-node schedules + per-edge verdicts."""
 
@@ -108,6 +143,8 @@ class GraphPlan:
     group: str                          # fused-group id for cache keys
     mesh_shape: Optional[Tuple[int, int]] = None
     axes: Tuple[str, str] = ("x", "y")
+    #: fused-node chains the executor may merge into one Pallas kernel
+    groups: List[FusedGroupPlan] = dataclasses.field(default_factory=list)
 
     @property
     def order(self) -> Tuple[str, ...]:
@@ -155,6 +192,12 @@ class GraphPlan:
             verdict = "fused" if e.fused else f"HBM ({e.reason})"
             lines.append(f"  edge {e.producer}->{e.consumer} "
                          f"[{e.edge}]: {verdict}")
+        for g in self.groups:
+            verdict = ("merged kernel" if g.eligible
+                       else f"sequential ({g.reason})")
+            lines.append(
+                f"  group {g.name}: {len(g.stages)} stages bm={g.bm} "
+                f"scratch={g.scratch_bytes}B -> {verdict}")
         lines.append(
             f"  hbm_bytes={rep.hbm_bytes:.0f} "
             f"unfused={rep.hbm_bytes_unfused:.0f} "
@@ -318,6 +361,110 @@ def _agree_blocks(plans: Dict[str, NodePlan], fused: List[EdgeDecision],
         if not changed:
             return
     raise RuntimeError("tile agreement did not converge")   # pragma: no cover
+
+
+# ---------------------------------------------------------------------------
+# Pass 3b — merged-kernel group derivation
+# ---------------------------------------------------------------------------
+
+def _group_eligibility(chain: List[str], plans: Dict[str, NodePlan],
+                       cfg: ArrayConfig) -> Optional[str]:
+    """Why this fused chain cannot run as one megakernel (None = it
+    can).  The template covers lhs-chained 2-D gemms with in-kernel
+    epilogues; anything else dispatches sequentially (still fused in
+    the schedule/cost-model sense)."""
+    for name in chain:
+        p = plans[name]
+        if p.node.algebra.name != "gemm":
+            return (f"stage {name} is {p.node.algebra.name}; the merged "
+                    f"template chains gemm stages only")
+        if p.epilogue and not p.epilogue_fused:
+            return (f"stage {name} epilogue applies outside the kernel")
+    dtypes = {plans[n].dtype for n in chain}
+    if len(dtypes) > 1:
+        return f"stages disagree on dtype ({sorted(dtypes)})"
+    return None
+
+
+def _derive_groups(plans: Dict[str, NodePlan],
+                   decisions: List[EdgeDecision],
+                   graph: AlgebraGraph, cfg: ArrayConfig
+                   ) -> List[FusedGroupPlan]:
+    """Walk fused producer->consumer edges into maximal chains and turn
+    each >=2-stage chain into a :class:`FusedGroupPlan`.
+
+    An intermediate edge must be *sole-consumed* by the next stage (and
+    must not be the graph output): a merged kernel keeps it in VMEM
+    scratch and never materializes it, so nobody else may read it.  A
+    producer whose output also feeds an unfused consumer therefore ends
+    a chain there — the diamond case: the edge materializes once for
+    the other consumer while the merged group streams its own copy.
+    """
+    nxt: Dict[str, str] = {}
+    for e in decisions:
+        if not e.fused or e.producer is None:
+            continue
+        if e.edge == graph.output:
+            continue                    # must materialize: it's returned
+        if len(graph.consumers_of(e.edge)) != 1:
+            continue                    # fan-out: someone else reads it
+        nxt[e.producer] = e.consumer
+    tails = set(nxt.values())
+    groups: List[FusedGroupPlan] = []
+    for head in plans:                  # topo order (dict is insertion)
+        if head not in nxt or head in tails:
+            continue
+        chain = [head]
+        while chain[-1] in nxt:
+            chain.append(nxt[chain[-1]])
+        p0 = plans[chain[0]]
+        why = _group_eligibility(chain, plans, cfg)
+        if why is not None:
+            # record an ineligible placeholder with the real geometry
+            # where it is well-defined (m from the head's form)
+            groups.append(FusedGroupPlan(
+                name="mg:" + "+".join(chain), stages=tuple(chain),
+                lhs_edge=p0.node.inputs[0], rhs_edges=(), bias_edges=(),
+                chain=(), m=p0.form.m, k0=p0.form.k, bm=p0.blocks[0],
+                dtype=p0.dtype, result_edge=plans[chain[-1]].result_edge,
+                scratch_bytes=0, vmem_bytes=0, eligible=False,
+                reason=why))
+            continue
+        stage_specs = tuple(
+            fused_chain_mod.ChainStage(
+                k=plans[n].form.k, n=plans[n].form.n,
+                epilogue=plans[n].epilogue,
+                has_bias=(plans[n].bias_edge is not None
+                          and epilogue_mod.needs_bias(plans[n].epilogue)))
+            for n in chain)
+        # gemm stores its inputs as (A, B): inputs[0] is the streamed
+        # lhs edge, inputs[1] the (n, k)-stored weight edge
+        rhs_edges = tuple(plans[n].node.inputs[1] for n in chain)
+        bias_edges = tuple(
+            plans[n].bias_edge if st.has_bias else None
+            for n, st in zip(chain, stage_specs))
+        m, k0, bm = p0.form.m, p0.form.k, p0.blocks[0]
+        eb = _elem_bytes(p0.dtype)
+        scratch = fused_chain_mod.chain_scratch_bytes(stage_specs, bm, eb)
+        vmem = fused_chain_mod.chain_vmem_bytes(stage_specs, m, k0, bm, eb)
+        eligible, reason = True, ""
+        if scratch > _vmem_resident_limit(cfg):
+            eligible = False
+            reason = (f"intermediate scratch strip {scratch}B exceeds "
+                      f"the VMEM residency limit "
+                      f"{_vmem_resident_limit(cfg)}B")
+        elif vmem > cfg.vmem_budget_bytes:
+            eligible = False
+            reason = (f"total residency {vmem}B exceeds the VMEM budget "
+                      f"{cfg.vmem_budget_bytes}B")
+        groups.append(FusedGroupPlan(
+            name="mg:" + "+".join(chain), stages=tuple(chain),
+            lhs_edge=p0.node.inputs[0], rhs_edges=rhs_edges,
+            bias_edges=bias_edges, chain=stage_specs, m=m, k0=k0, bm=bm,
+            dtype=p0.dtype, result_edge=plans[chain[-1]].result_edge,
+            scratch_bytes=scratch, vmem_bytes=vmem,
+            eligible=eligible, reason=reason))
+    return groups
 
 
 # ---------------------------------------------------------------------------
@@ -543,4 +690,5 @@ def plan_graph(graph: AlgebraGraph, *,
                      edges=decisions, group=group, mesh_shape=mesh_shape,
                      axes=axes)
     _agree_blocks(plans, [e for e in decisions if e.fused], graph, cfg)
+    plan.groups = _derive_groups(plans, decisions, graph, cfg)
     return plan

@@ -18,10 +18,12 @@ from .calibrate import Calibration, fit as fit_calibration  # noqa: F401
 from .calibrate import load as load_calibration  # noqa: F401
 from .measure import Measurement, measure as measure_fn  # noqa: F401
 from .tuner import TuneResult, Variant, rank_measured, tune  # noqa: F401
+from .tuner import GroupTuneResult, GroupVariant, tune_group  # noqa: F401
 
 __all__ = [
     "cache", "calibrate", "measure", "report", "tuner",
     "Calibration", "fit_calibration", "load_calibration",
     "Measurement", "measure_fn",
     "TuneResult", "Variant", "rank_measured", "tune",
+    "GroupTuneResult", "GroupVariant", "tune_group",
 ]

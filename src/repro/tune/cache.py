@@ -19,6 +19,13 @@ Two maps live in one JSON document (``tune_cache.json``):
     ``tune()`` call on the same shape is a pure cache hit — no search,
     no measurement, no candidate lowering.
 
+``groups``
+    fused-group key (``pipeline._group_cache_key``) -> the measured
+    merged-vs-sequential verdict for one graph chain: ``merged`` plus
+    (when merged won) the winning ``bm``/``interleave`` knobs.  A
+    ``merged: False`` entry is a real hit — it tells ``lower_group``
+    to return None so the executor keeps per-node dispatch.
+
 Robustness contract (ISSUE 6 satellite 3): a corrupt or truncated cache
 file degrades to a warning plus the analytical fallback (never an
 exception on the lower path); entries are version-stamped and silently
@@ -78,7 +85,8 @@ def key_of(key_tuple: Tuple) -> str:
 
 
 def _empty_doc() -> Dict[str, Any]:
-    return {"version": SCHEMA_VERSION, "variants": {}, "choices": {}}
+    return {"version": SCHEMA_VERSION, "variants": {}, "choices": {},
+            "groups": {}}
 
 
 def _load() -> Dict[str, Any]:
@@ -114,6 +122,7 @@ def _load() -> Dict[str, Any]:
                     "version": SCHEMA_VERSION,
                     "variants": dict(raw.get("variants") or {}),
                     "choices": dict(raw.get("choices") or {}),
+                    "groups": dict(raw.get("groups") or {}),
                 }
         except (ValueError, OSError) as e:
             with _LOCK:
@@ -163,6 +172,17 @@ def _valid_variant(entry: Any) -> bool:
             and isinstance(entry.get("accum"), str))
 
 
+def _valid_group(entry: Any) -> bool:
+    if not (isinstance(entry, dict)
+            and entry.get("version") == SCHEMA_VERSION
+            and isinstance(entry.get("merged"), bool)):
+        return False
+    if not entry["merged"]:
+        return True                     # sequential verdict carries no knobs
+    return (isinstance(entry.get("bm"), int) and entry["bm"] > 0
+            and isinstance(entry.get("interleave"), str))
+
+
 def _valid_choice(entry: Any) -> bool:
     return (isinstance(entry, dict)
             and entry.get("version") == SCHEMA_VERSION
@@ -210,6 +230,55 @@ def store_variant(key: str, *, blocks: Tuple[int, int, int],
     with _LOCK:
         doc = dict(_load())
         doc["variants"] = {**doc["variants"], key: entry}
+        _save(doc)
+        _STATS["stores"] += 1
+    return entry
+
+
+# ---------------------------------------------------------------------------
+# Group map — merged-kernel verdicts per fused chain
+# ---------------------------------------------------------------------------
+
+def lookup_group(key: str) -> Optional[Dict[str, Any]]:
+    """The persisted merged-vs-sequential verdict for a fused-group key
+    digest (``pipeline._group_cache_key``), or None.  ``merged: False``
+    entries are themselves cache hits — they record that sequential
+    dispatch measured faster, so the executor should skip merging."""
+    entry = _load()["groups"].get(key)
+    with _LOCK:
+        if entry is None:
+            _STATS["misses"] += 1
+            return None
+        if not _valid_group(entry):
+            _STATS["invalid"] += 1
+            _STATS["misses"] += 1
+            return None
+        _STATS["hits"] += 1
+    return entry
+
+
+def store_group(key: str, *, merged: bool, bm: Optional[int] = None,
+                interleave: Optional[str] = None,
+                merged_s: Optional[float] = None,
+                sequential_s: Optional[float] = None,
+                meta: Optional[Dict[str, Any]] = None) -> Dict[str, Any]:
+    entry: Dict[str, Any] = {
+        "version": SCHEMA_VERSION,
+        "merged": bool(merged),
+    }
+    if bm is not None:
+        entry["bm"] = int(bm)
+    if interleave is not None:
+        entry["interleave"] = str(interleave)
+    if merged_s is not None:
+        entry["merged_s"] = float(merged_s)
+    if sequential_s is not None:
+        entry["sequential_s"] = float(sequential_s)
+    if meta:
+        entry["meta"] = meta
+    with _LOCK:
+        doc = dict(_load())
+        doc["groups"] = {**doc["groups"], key: entry}
         _save(doc)
         _STATS["stores"] += 1
     return entry
@@ -270,7 +339,8 @@ def cache_info() -> Dict[str, int]:
     doc = _load()
     with _LOCK:
         return {"variants": len(doc["variants"]),
-                "choices": len(doc["choices"]), **_STATS}
+                "choices": len(doc["choices"]),
+                "groups": len(doc.get("groups") or {}), **_STATS}
 
 
 def cache_clear(*, counters_only: bool = False) -> None:

@@ -299,6 +299,236 @@ def tune(alg: TensorAlgebra, dataflow: Optional[Dataflow] = None, *,
         cache_hit=False, trials=tuple(trials))
 
 
+# ---------------------------------------------------------------------------
+# Merged-group tuning — megakernel vs sequential dispatch (ISSUE 9)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class GroupVariant:
+    """One point in the merged-kernel knob space: the m-block ladder
+    step and the stage interleave order (``kernels/fused_chain.py``)."""
+
+    bm: int
+    interleave: str = "chain"
+
+
+@dataclasses.dataclass(frozen=True)
+class GroupTrial:
+    """One measured (or rejected) merged variant of one fused group."""
+
+    variant: GroupVariant
+    measurement: Optional[Measurement]   # None when the variant failed
+    ok: bool
+    error: str = ""
+
+    @property
+    def median_s(self) -> float:
+        return self.measurement.median_s if self.measurement else float("inf")
+
+
+@dataclasses.dataclass
+class GroupTuneResult:
+    """What a ``tune_group()`` call decided for one fused chain.
+
+    ``merged`` is the verdict: the best megakernel variant measured
+    faster than sequential per-node dispatch.  ``kernel`` carries the
+    winning :class:`~repro.compile.pipeline.CompiledGroupKernel` when
+    merged won, None when sequential did (the executor then keeps
+    per-node dispatch).  The verdict persists in the on-disk tuning
+    cache, so a later ``build()``/``generate()`` in any process honors
+    it without re-measuring (``cache_hit``).
+    """
+
+    group: str
+    kernel: Optional[pipeline.CompiledGroupKernel]
+    merged: bool
+    variant: Optional[GroupVariant]
+    merged_s: Optional[float]
+    sequential_s: Optional[float]
+    cache_hit: bool
+    trials: Tuple[GroupTrial, ...] = ()
+
+    @property
+    def speedup(self) -> Optional[float]:
+        """Sequential over merged median — >1 means the megakernel won."""
+        if self.merged_s and self.sequential_s:
+            return self.sequential_s / self.merged_s
+        return None
+
+
+def group_bm_candidates(group) -> List[int]:
+    """m-block ladder for a merged chain: the plan's agreed bm (trial
+    #0), hardware-friendly 128/256 clamps, and the whole-m degenerate
+    single-phase case.  Deduped, agreed-first."""
+    m = group.m
+    cands = [group.bm, min(128, m), min(256, m), m]
+    out: List[int] = []
+    for bm in cands:
+        bm = max(1, min(int(bm), m))
+        if bm not in out:
+            out.append(bm)
+    return out
+
+
+def _group_operands(group, seed: int):
+    """Random integer operands in the group's external layout (lhs
+    ``(m, k0)``, per-stage weights in gemm storage ``(n, k)``, rank-1
+    biases) — integers keep fp32 stage dots exact, same rationale as
+    ``TensorAlgebra.random_operands``."""
+    rng = np.random.default_rng(seed)
+    lhs = rng.integers(-4, 5, size=(group.m, group.k0))
+    rhss = [rng.integers(-4, 5, size=(st.n, st.k)) for st in group.chain]
+    biases = [rng.integers(-4, 5, size=(st.n,))
+              for st in group.chain if st.has_bias]
+    return lhs, rhss, biases
+
+
+def _sequential_runner(plan, group, *, interpret: bool, backend: str):
+    """The measured baseline: the group's member nodes lowered exactly
+    as ``graph.executor.build(..., merge=False)`` lowers them — one
+    ``pallas_call`` per stage, intermediates round-tripping as JAX
+    arrays — chained into one callable over the group's operands."""
+    from ..graph.executor import bias_operand_key
+    from ..kernels import epilogue as epilogue_mod
+    stages = []
+    for name in group.stages:
+        p = plan.nodes[name]
+        fused_ep = p.epilogue if p.epilogue_fused else ()
+        bias_key = (bias_operand_key(p.bias_edge)
+            if (fused_ep and p.bias_edge is not None
+                and epilogue_mod.needs_bias(fused_ep)) else None)
+        k = pipeline.lower(
+            p.node.algebra, p.dataflow, cfg=plan.cfg, dtype=p.dtype,
+            interpret=interpret, backend=backend, validate=False,
+            blocks=p.blocks if p.blocks_constrained else None,
+            epilogue=fused_ep, bias_tensor=bias_key,
+            fused_group=plan.fused_group_for(name))
+        stages.append((k, p))
+
+    def run(lhs, rhss, biases):
+        x, bi = lhs, 0
+        for i, (k, p) in enumerate(stages):
+            a_name = p.node.algebra.inputs[0].name
+            b_name = p.node.algebra.inputs[1].name
+            ops = {a_name: x, b_name: rhss[i]}
+            if k.bias_tensor is not None:
+                ops[k.bias_tensor] = biases[bi]
+                bi += 1
+            x = k(ops)
+        return x
+
+    return run
+
+
+def tune_group(plan, group, *,
+               interpret: bool = False,
+               backend: str = "pallas",
+               repeats: int = DEFAULT_REPEATS,
+               warmup: int = DEFAULT_WARMUP,
+               force: bool = False,
+               max_trials: int = DEFAULT_MAX_TRIALS,
+               seed: int = 0) -> GroupTuneResult:
+    """Measure merged-megakernel variants against sequential per-node
+    dispatch for one fused group, and persist whichever wins.
+
+    Knobs: the m-block ladder (``group_bm_candidates``) crossed with the
+    stage interleave orders (``fused_chain.FUSED_INTERLEAVES``), capped
+    at ``max_trials``.  Every variant is gated on matching the
+    sequential baseline's output before it may be timed.  ``force=True``
+    bypasses the on-disk group cache and re-measures.
+    """
+    if not group.eligible:
+        raise ValueError(f"group {group.name} is not merged-eligible: "
+                         f"{group.reason}")
+    from ..kernels.fused_chain import FUSED_INTERLEAVES
+    digest = _cache.key_of(
+        pipeline._group_cache_key(plan, group, interpret, backend))
+
+    if not force:
+        entry = _cache.lookup_group(digest)
+        if entry is not None:
+            # no explicit knobs: lower_group re-consults the cache, so a
+            # merged winner comes back source == "tuned" and a
+            # sequential verdict comes back None
+            kernel = pipeline.lower_group(plan, group,
+                                          interpret=interpret,
+                                          backend=backend)
+            variant = (GroupVariant(entry["bm"], entry["interleave"])
+                       if entry["merged"] else None)
+            return GroupTuneResult(
+                group=group.name, kernel=kernel, merged=entry["merged"],
+                variant=variant, merged_s=entry.get("merged_s"),
+                sequential_s=entry.get("sequential_s"),
+                cache_hit=True, trials=())
+
+    lhs, rhss, biases = _group_operands(group, seed)
+    tol = _REL_TOL.get(jnp.dtype(group.dtype).name, 2e-2)
+
+    # --- the baseline merging must beat: sequential dispatch -----------
+    seq = _sequential_runner(plan, group, interpret=interpret,
+                             backend=backend)
+    ref_out = np.asarray(seq(lhs, rhss, biases), dtype=np.float64)
+    seq_meas = measure(seq, lhs, rhss, biases,
+                       warmup=warmup, repeats=repeats)
+
+    # --- the merged-variant sweep --------------------------------------
+    trials: List[GroupTrial] = []
+    best: Optional[Tuple[float, GroupVariant,
+                         pipeline.CompiledGroupKernel]] = None
+    for bm in group_bm_candidates(group):
+        for interleave in FUSED_INTERLEAVES:
+            if len(trials) >= max_trials:
+                break
+            variant = GroupVariant(bm, interleave)
+            try:
+                k = pipeline.lower_group(
+                    plan, group, interpret=interpret, backend=backend,
+                    validate=False, bm=bm, interleave=interleave)
+                got = np.asarray(k(lhs, rhss, biases), dtype=np.float64)
+                err = _rel_err(got, ref_out)
+                if err > tol:
+                    trials.append(GroupTrial(variant, None, False,
+                                             f"rel err {err:.3e} > {tol}"))
+                    continue
+                meas = measure(k, lhs, rhss, biases,
+                               warmup=warmup, repeats=repeats)
+            except Exception as e:      # VMEM overflow, bad knob combo, ...
+                trials.append(GroupTrial(variant, None, False,
+                                         f"{type(e).__name__}: {e}"))
+                continue
+            trials.append(GroupTrial(variant, meas, True))
+            if best is None or meas.median_s < best[0]:
+                best = (meas.median_s, variant, k)
+
+    merged = best is not None and best[0] < seq_meas.median_s
+    if merged:
+        merged_s, win_variant, win_kernel = best
+        win_kernel.source = "tuned"
+        win_kernel.measured_s = merged_s
+        win_kernel.sequential_s = seq_meas.median_s
+        _cache.store_group(
+            digest, merged=True, bm=win_variant.bm,
+            interleave=win_variant.interleave, merged_s=merged_s,
+            sequential_s=seq_meas.median_s,
+            meta={"group": group.name, "stages": list(group.stages)})
+        return GroupTuneResult(
+            group=group.name, kernel=win_kernel, merged=True,
+            variant=win_variant, merged_s=merged_s,
+            sequential_s=seq_meas.median_s, cache_hit=False,
+            trials=tuple(trials))
+
+    _cache.store_group(
+        digest, merged=False,
+        merged_s=best[0] if best else None,
+        sequential_s=seq_meas.median_s,
+        meta={"group": group.name, "stages": list(group.stages)})
+    return GroupTuneResult(
+        group=group.name, kernel=None, merged=False, variant=None,
+        merged_s=best[0] if best else None,
+        sequential_s=seq_meas.median_s, cache_hit=False,
+        trials=tuple(trials))
+
+
 def rank_measured(alg: TensorAlgebra,
                   pairs: Sequence[Tuple[object, Dataflow]], *,
                   cfg: ArrayConfig = ArrayConfig(),

@@ -14,6 +14,7 @@ Covers the graph tentpole's contract surface:
 * the tuning cache never replays a standalone variant for a fused-group
   or epilogue'd lowering (the ``_cache_key`` regression).
 """
+import jax.numpy as jnp
 import numpy as np
 import pytest
 
@@ -23,6 +24,8 @@ from repro.core.algebra import get_algebra
 from repro.core.costmodel import GraphCostReport
 from repro.core import dse
 from repro.graph import AlgebraGraph, GraphNode, plan_graph
+from repro.graph import executor as graph_executor
+from repro.kernels import fused_chain
 from repro.models import chains
 from repro.tune import cache as tune_cache
 
@@ -263,8 +266,9 @@ class TestDiamond:
             inputs=("x", "W", "W1", "W2"), output="z")
 
     def test_producer_runs_once(self, monkeypatch):
+        # merge=False: the PR 8 sequential path — one dispatch per node
         g = self.diamond()
-        acc = repro.generate(g)       # lower (and validate) first
+        acc = graph_executor.build(g, interpret=True, merge=False)
         calls = []
         orig = pipeline.CompiledKernel.__call__
 
@@ -276,6 +280,36 @@ class TestDiamond:
         ops = g.random_operands(0)
         got = np.asarray(acc(ops))
         assert len(calls) == 4        # p, q1, q2, r — p not re-computed
+        np.testing.assert_allclose(
+            got, g.reference(ops).astype(np.float64), atol=1e-3)
+
+    def test_producer_runs_once_merged(self, monkeypatch):
+        # default path: q1->r merges (o1 is sole-consumed) so only p and
+        # q2 dispatch per-node; p still runs exactly once
+        g = self.diamond()
+        acc = repro.generate(g)
+        assert list(acc.group_kernels) == ["mg:q1+r"]
+        calls, group_calls = [], []
+        orig = pipeline.CompiledKernel.__call__
+        gorig = pipeline.CompiledGroupKernel.__call__
+
+        def counting(self, operands):
+            calls.append(self.algebra.name)
+            return orig(self, operands)
+
+        def gcounting(self, lhs, rhss, biases=()):
+            group_calls.append(self.group)
+            return gorig(self, lhs, rhss, biases)
+
+        monkeypatch.setattr(pipeline.CompiledKernel, "__call__", counting)
+        monkeypatch.setattr(pipeline.CompiledGroupKernel, "__call__",
+                            gcounting)
+        ops = g.random_operands(0)
+        got = np.asarray(acc(ops))
+        assert len(calls) == 2            # p, q2 — p not re-computed
+        # one megakernel dispatch (its .group label may name another
+        # graph's structurally-identical chain — entries are shared)
+        assert len(group_calls) == 1
         np.testing.assert_allclose(
             got, g.reference(ops).astype(np.float64), atol=1e-3)
 
@@ -307,6 +341,182 @@ class TestTuneCacheKeys:
         assert fused.source == "analytical" and fused.blocks != (8, 8, 8)
         epi = pipeline.lower(alg, df, interpret=True, epilogue=("relu",))
         assert epi.source == "analytical"
+
+
+# ---------------------------------------------------------------------------
+# Merged-kernel execution (ISSUE 9): one pallas_call per fused chain
+# ---------------------------------------------------------------------------
+
+def group_operands(group, ops):
+    """The group's external operands picked out of a graph operand dict."""
+    return (ops[group.lhs_edge],
+            [ops[e] for e in group.rhs_edges],
+            [ops[e] for e in group.bias_edges if e is not None])
+
+
+class TestMergedKernel:
+    def test_merged_single_pallas_call(self, monkeypatch):
+        # the acceptance chain: gemm·gelu·gemm runs as ONE megakernel —
+        # zero per-node dispatches — and is bit-exact vs the sequential
+        # path (bm == m: identical dot + epilogue sequence)
+        g = chain_graph()
+        acc = repro.generate(g)
+        assert list(acc.group_kernels) == ["mg:g1+g2"]
+        seq = graph_executor.build(g, interpret=True, merge=False)
+        ops = g.random_operands(0)
+        want_seq = np.asarray(seq(ops))
+
+        calls, group_calls = [], []
+        orig = pipeline.CompiledKernel.__call__
+        gorig = pipeline.CompiledGroupKernel.__call__
+        monkeypatch.setattr(
+            pipeline.CompiledKernel, "__call__",
+            lambda self, operands: calls.append(self.algebra.name)
+            or orig(self, operands))
+        monkeypatch.setattr(
+            pipeline.CompiledGroupKernel, "__call__",
+            lambda self, lhs, rhss, biases=():
+            group_calls.append(self.group) or gorig(self, lhs, rhss, biases))
+        got = np.asarray(acc(ops))
+        assert calls == []                 # nothing dispatched per-node
+        assert len(group_calls) == 1       # the whole chain: ONE pallas_call
+        np.testing.assert_array_equal(got, want_seq)      # bit-exact
+        np.testing.assert_allclose(
+            got, g.reference(ops).astype(np.float64), atol=1e-3)
+
+    def test_merged_attention_mlp_parity(self):
+        # the scores->softmax->attend pair + MLP merges into one chain,
+        # still matching the numpy graph oracle and the sequential path
+        g = chains.attention_mlp_graph(lq=32, lkv=32, d=32, dv=32, f=64)
+        acc = repro.generate(g)
+        assert list(acc.group_kernels) == ["mg:scores+attend+mlp_up+mlp_down"]
+        gk = acc.group_kernels["mg:scores+attend+mlp_up+mlp_down"]
+        assert gk.bm == gk.m              # whole-tensor degenerate phase
+        seq = graph_executor.build(g, interpret=True, merge=False)
+        ops = g.random_operands(0)
+        np.testing.assert_array_equal(np.asarray(acc(ops)),
+                                      np.asarray(seq(ops)))
+        acc.validate()
+
+    def test_merged_nondivisible_m_blocks(self):
+        # m=24 against bm in {7, 16}: the pad-to-multiple + slice path,
+        # on both stage interleaves
+        g = AlgebraGraph(
+            nodes=(
+                GraphNode(name="g1", inputs=("x", "W1"), output="h_raw",
+                          algebra=small_gemm(m=24, n=32, k=16)),
+                GraphNode(name="act", inputs=("h_raw",), output="h",
+                          op="gelu"),
+                GraphNode(name="g2", inputs=("h", "W2"), output="y",
+                          algebra=small_gemm(m=24, n=16, k=32)),
+            ),
+            inputs=("x", "W1", "W2"), output="y")
+        plan = plan_graph(g)
+        grp = next(x for x in plan.groups if x.eligible)
+        ops = g.random_operands(0)
+        want = np.asarray(g.reference(ops), np.float64)
+        bound = 1e-3 + 1e-5 * np.abs(want).max()
+        lhs, rhss, biases = group_operands(grp, ops)
+        for bm in (7, 16):
+            for il in fused_chain.FUSED_INTERLEAVES:
+                gk = pipeline.lower_group(plan, grp, interpret=True,
+                                          bm=bm, interleave=il)
+                got = np.asarray(gk(lhs, rhss, biases), np.float64)
+                assert got.shape == want.shape
+                assert np.abs(got - want).max() <= bound, (bm, il)
+
+    def test_merged_bf16_chain(self):
+        # validate=False: the per-node lower-time oracle check uses an
+        # fp32 atol; the bf16-tolerance oracle comparison happens below
+        g = chain_graph()
+        acc = graph_executor.build(g, interpret=True, dtype=jnp.bfloat16,
+                                   validate=False)
+        assert list(acc.group_kernels) == ["mg:g1+g2"]
+        seq = graph_executor.build(g, interpret=True, dtype=jnp.bfloat16,
+                                   merge=False, validate=False)
+        ops = g.random_operands(0)
+        got = np.asarray(acc(ops), np.float64)
+        # same per-stage math (fp32 dot, fp32 epilogue, bf16 cast between
+        # stages) in the same order: bit-equal to sequential dispatch
+        np.testing.assert_array_equal(got, np.asarray(seq(ops), np.float64))
+        want = np.asarray(g.reference(ops), np.float64)
+        scale = np.abs(want).max() + 1e-30
+        assert np.abs(got - want).max() / scale <= 2e-2
+
+    def test_merged_vmem_overflow_falls_back(self):
+        # a budget too small for the intermediate strip: the planner
+        # keeps the group as documentation (eligible=False) and the
+        # executor stays sequential — still matching the oracle
+        from repro.core.tiling import ArrayConfig
+        g = chain_graph()
+        cfg = ArrayConfig(vmem_budget_bytes=2048)
+        plan = plan_graph(g, cfg=cfg)
+        assert plan.groups and not plan.groups[0].eligible
+        assert "VMEM" in plan.groups[0].reason
+        acc = graph_executor.build(g, plan=plan, interpret=True, cfg=cfg)
+        assert not acc.group_kernels
+        acc.validate()
+
+    def test_merged_sequential_verdict_respected(self):
+        # a persisted merged=False verdict (sequential measured faster)
+        # makes lower_group decline and build() keep per-node dispatch
+        g = chain_graph()
+        plan = plan_graph(g)
+        grp = next(x for x in plan.groups if x.eligible)
+        digest = tune_cache.key_of(
+            pipeline._group_cache_key(plan, grp, True, "pallas"))
+        tune_cache.store_group(digest, merged=False)
+        assert pipeline.lower_group(plan, grp, interpret=True) is None
+        acc = graph_executor.build(g, plan=plan, interpret=True)
+        assert not acc.group_kernels
+        acc.validate()
+
+    def test_merged_tune_group_verdict_cached(self):
+        from repro.tune import tuner
+        g = chain_graph()
+        plan = plan_graph(g)
+        grp = next(x for x in plan.groups if x.eligible)
+        res = tuner.tune_group(plan, grp, interpret=True,
+                               repeats=1, warmup=0)
+        assert not res.cache_hit and res.trials
+        assert all(t.ok for t in res.trials)
+        res2 = tuner.tune_group(plan, grp, interpret=True)
+        assert res2.cache_hit and res2.merged == res.merged
+        # and build(tune=...) consumes the same verdict without measuring
+        acc = graph_executor.build(g, plan=plan, interpret=True, tune=8)
+        assert acc.group_tuning[grp.name].cache_hit
+        assert bool(acc.group_kernels) == res.merged
+        acc.validate()
+
+    def test_merged_bias_key_collision_rejected(self):
+        # regression (ISSUE 9 bugfix): a tensor name inside the reserved
+        # "bias:" operand namespace would silently shadow the injected
+        # bias vector; build() must reject it
+        g = AlgebraGraph(
+            nodes=(GraphNode(name="mm", inputs=("bias:x", "B"),
+                             output="C", algebra=small_gemm()),),
+            inputs=("bias:x", "B"), output="C")
+        with pytest.raises(ValueError, match="bias:"):
+            graph_executor.build(g, interpret=True)
+
+    def test_merged_group_cache_key_separates_epilogues(self):
+        # two chains identical but for one stage's folded epilogue must
+        # not share a merged compile/tune cache entry
+        g1 = chain_graph()
+        g2 = AlgebraGraph(
+            nodes=(
+                GraphNode(name="g1", inputs=("x", "W1"), output="h_raw",
+                          algebra=small_gemm()),
+                GraphNode(name="act", inputs=("h_raw",), output="h",
+                          op="relu"),
+                GraphNode(name="g2", inputs=("h", "W2"), output="y",
+                          algebra=small_gemm()),
+            ),
+            inputs=("x", "W1", "W2"), output="y")
+        p1, p2 = plan_graph(g1), plan_graph(g2)
+        k1 = pipeline._group_cache_key(p1, p1.groups[0], True, "pallas")
+        k2 = pipeline._group_cache_key(p2, p2.groups[0], True, "pallas")
+        assert k1 != k2
 
     def test_variant_stored_for_fused_group_is_found(self):
         alg = small_gemm()
