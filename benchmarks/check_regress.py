@@ -11,13 +11,16 @@ job when a performance ratio regresses below its floor:
     pick must never lose to its own untuned baseline),
   * BENCH_serve.json — schema ``repro.serve.report.validate_serve``;
     continuous-vs-static throughput >= SERVE_SPEEDUP_FLOOR,
-  * BENCH_graph.json — schema v2: fused-vs-unfused HBM ratio >= the
+  * BENCH_graph.json — schema v3: fused-vs-unfused HBM ratio >= the
     modeled floor recorded in the document
     (``benchmarks.graph_fusion.HBM_RATIO_FLOOR``), *measured*
     merged-vs-sequential wall-clock speedup >= the document's
-    ``measured_floor`` (``MEASURED_SPEEDUP_FLOOR``, >= 1.2), and bit
+    ``measured_floor`` (``MEASURED_SPEEDUP_FLOOR``, >= 1.2), bit
     parity with both the explicit-schedule oracle and sequential
-    dispatch.
+    dispatch, AND a ``model_layer`` entry: the whole dense-family
+    layer graph must keep >= 1 merged group with its residual tap
+    exported, bit parity vs ``models.transformer.dense_layer_forward``,
+    and measured layer-forward speedup >= ``model_floor`` (>= 1.2).
 
 The emitting benchmarks enforce their own gates too; this checker is
 the belt to their suspenders — it catches a stale or hand-edited
@@ -75,19 +78,26 @@ def check(problems: list) -> None:
     if graph is not None:
         floor = graph.get("floor")
         mfloor = graph.get("measured_floor")
+        lfloor = graph.get("model_floor")
         chains = graph.get("chains")
-        if graph.get("version") != 2:
+        model = graph.get("model_layer")
+        if graph.get("version") != 3:
             problems.append(f"BENCH_graph.json: schema version "
-                            f"{graph.get('version')!r} != 2 (stale "
+                            f"{graph.get('version')!r} != 3 (stale "
                             f"artifact? re-run benchmarks.graph_fusion)")
         elif (not isinstance(floor, (int, float))
                 or not isinstance(mfloor, (int, float))
-                or not isinstance(chains, list) or not chains):
-            problems.append("BENCH_graph.json: needs numeric 'floor' and "
-                            "'measured_floor' and non-empty 'chains'")
-        elif mfloor < 1.2:
+                or not isinstance(lfloor, (int, float))
+                or not isinstance(chains, list) or not chains
+                or not isinstance(model, dict)):
+            problems.append("BENCH_graph.json: needs numeric 'floor', "
+                            "'measured_floor' and 'model_floor', "
+                            "non-empty 'chains' and a 'model_layer' "
+                            "object")
+        elif mfloor < 1.2 or lfloor < 1.2:
             problems.append(f"BENCH_graph.json: measured_floor {mfloor} "
-                            f"< 1.2 (the gate must not be weakened)")
+                            f"/ model_floor {lfloor} < 1.2 (the gates "
+                            f"must not be weakened)")
         else:
             for row in chains:
                 ratio = row.get("hbm_ratio")
@@ -113,6 +123,27 @@ def check(problems: list) -> None:
                     problems.append(
                         f"BENCH_graph.json: {row.get('shape')} merged "
                         f"kernel lost bit parity vs sequential dispatch")
+            speedup = model.get("measured_speedup")
+            if not isinstance(speedup, (int, float)) or speedup < lfloor:
+                problems.append(
+                    f"BENCH_graph.json: model_layer measured_speedup "
+                    f"{speedup} < floor {lfloor}")
+            if not model.get("merged_groups"):
+                problems.append(
+                    "BENCH_graph.json: model_layer has no merged group "
+                    "(whole-layer fusion regressed)")
+            if not model.get("tapped_edges"):
+                problems.append(
+                    "BENCH_graph.json: model_layer exports no residual "
+                    "tap")
+            if model.get("bit_parity") is not True:
+                problems.append(
+                    "BENCH_graph.json: model_layer lost bit parity vs "
+                    "models.transformer.dense_layer_forward")
+            if model.get("bit_parity_sequential") is not True:
+                problems.append(
+                    "BENCH_graph.json: model_layer merged kernel lost "
+                    "bit parity vs sequential dispatch")
 
 
 def main() -> None:

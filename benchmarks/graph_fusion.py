@@ -2,7 +2,7 @@
 
     PYTHONPATH=src python -m benchmarks.graph_fusion [--smoke]
 
-Gates (CI tier-1 smoke, PR 8 + ISSUE 9):
+Gates (CI tier-1 smoke, PR 8 + ISSUE 9 + ISSUE 10):
   * the fused plan's HBM-bytes proxy beats the unfused pricing of the
     same chain by >= 1.3x (``GraphCostReport.hbm_ratio``),
   * execution is bit-identical to the explicit-schedule oracle
@@ -10,11 +10,16 @@ Gates (CI tier-1 smoke, PR 8 + ISSUE 9):
     (``build(merge=False)``),
   * the merged megakernel's *measured* wall clock (``tune/measure.py``
     harness: warmup + median-of-repeats around ``block_until_ready``)
-    beats sequential dispatch by >= 1.2x.
+    beats sequential dispatch by >= 1.2x,
+  * the whole dense-family layer graph (``graph/from_model.py``) merges
+    into one megakernel spanning attention and the MLP (residual tap
+    exported), stays bit-identical to
+    ``models.transformer.dense_layer_forward`` and to sequential
+    dispatch, and its measured layer-forward speedup clears >= 1.2x.
 
-``--smoke`` runs the small chain only; the full run adds a larger
-chain.  Emits ``BENCH_graph.json`` (schema v2: ``measured_speedup``
-per chain) at the repo root.
+``--smoke`` runs the small shapes only; the full run adds larger ones.
+Emits ``BENCH_graph.json`` (schema v3: ``measured_speedup`` per chain
+plus the ``model_layer`` entry) at the repo root.
 """
 from __future__ import annotations
 
@@ -30,6 +35,8 @@ ROOT = pathlib.Path(__file__).parent.parent
 HBM_RATIO_FLOOR = 1.3
 #: minimum measured merged-vs-sequential wall-clock speedup
 MEASURED_SPEEDUP_FLOOR = 1.2
+#: minimum measured whole-layer-forward speedup over sequential dispatch
+MODEL_SPEEDUP_FLOOR = 1.2
 #: calls per timed sample — amortizes timer granularity; the harness
 #: still takes the median over ``repeats`` samples
 CALLS_PER_SAMPLE = 10
@@ -82,6 +89,54 @@ def run_chain(lq, lkv, d, dv, f, *, repeats=7) -> dict:
     }
 
 
+def run_model_layer(l, d, dv, f, *, repeats=7) -> dict:
+    """One dense-family transformer layer as a fused graph vs sequential
+    per-node dispatch, bit-compared against the model-side oracle."""
+    import repro
+    from repro.graph import executor as graph_executor
+    from repro.graph import from_model
+    from repro.tune.measure import measure
+
+    g = from_model.transformer_layer_graph(l=l, d=d, dv=dv, f=f)
+    acc = repro.generate(g)
+    seq = graph_executor.build(g, interpret=True, merge=False)
+    rep = acc.cost_report()
+    ops = g.random_operands(1)
+    got = np.asarray(acc(ops))
+    got_seq = np.asarray(seq(ops))
+    want = np.asarray(from_model.layer_oracle(ops))
+    max_err = float(np.abs(got - want).max())
+
+    def loop(fn):
+        def run():
+            out = None
+            for _ in range(CALLS_PER_SAMPLE):
+                out = fn(ops)
+            return out
+        return run
+
+    t_merged = measure(loop(acc), warmup=1,
+                       repeats=repeats).median_s / CALLS_PER_SAMPLE
+    t_seq = measure(loop(seq), warmup=1,
+                    repeats=repeats).median_s / CALLS_PER_SAMPLE
+    return {
+        "shape": {"l": l, "d": d, "dv": dv, "f": f},
+        "hbm_bytes": rep.hbm_bytes,
+        "hbm_bytes_unfused": rep.hbm_bytes_unfused,
+        "hbm_ratio": rep.hbm_ratio,
+        "fused_edges": list(rep.fused_edges),
+        "tapped_edges": list(rep.tapped_edges),
+        "tap_hbm_bytes": rep.tap_hbm_bytes,
+        "merged_groups": list(acc.group_kernels),
+        "bit_parity": bool((got == want).all()),
+        "bit_parity_sequential": bool((got == got_seq).all()),
+        "max_err": max_err,
+        "t_merged_s": t_merged,
+        "t_sequential_s": t_seq,
+        "measured_speedup": t_seq / t_merged,
+    }
+
+
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
@@ -107,8 +162,22 @@ def main(argv=None) -> None:
               f"bit_parity={row['bit_parity']} "
               f"(max_err={row['max_err']:.1e})")
 
-    doc = {"version": 2, "floor": HBM_RATIO_FLOOR,
-           "measured_floor": MEASURED_SPEEDUP_FLOOR, "chains": rows}
+    layer_shape = (32, 32, 32, 64) if args.smoke else (64, 64, 64, 128)
+    model = run_model_layer(*layer_shape)
+    print(f"model layer l={layer_shape[0]} d={layer_shape[1]} "
+          f"dv={layer_shape[2]} f={layer_shape[3]}: "
+          f"merged={model['merged_groups']}, "
+          f"taps={model['tapped_edges']}, "
+          f"measured {model['t_merged_s'] * 1e3:.2f}ms vs sequential "
+          f"{model['t_sequential_s'] * 1e3:.2f}ms "
+          f"({model['measured_speedup']:.2f}x), "
+          f"bit_parity={model['bit_parity']} "
+          f"(max_err={model['max_err']:.1e})")
+
+    doc = {"version": 3, "floor": HBM_RATIO_FLOOR,
+           "measured_floor": MEASURED_SPEEDUP_FLOOR,
+           "model_floor": MODEL_SPEEDUP_FLOOR,
+           "chains": rows, "model_layer": model}
     (ROOT / "BENCH_graph.json").write_text(json.dumps(doc, indent=2))
     print(f"wrote {ROOT / 'BENCH_graph.json'}")
 
@@ -131,12 +200,30 @@ def main(argv=None) -> None:
             problems.append(f"{row['shape']}: measured_speedup "
                             f"{row['measured_speedup']:.2f} < floor "
                             f"{MEASURED_SPEEDUP_FLOOR}")
+    if not model["bit_parity"]:
+        problems.append(f"model_layer {model['shape']}: not bit-identical"
+                        f" to models.transformer.dense_layer_forward "
+                        f"(max err {model['max_err']:.3e})")
+    if not model["bit_parity_sequential"]:
+        problems.append(f"model_layer {model['shape']}: merged kernel "
+                        f"not bit-identical to sequential dispatch")
+    if not model["merged_groups"]:
+        problems.append(f"model_layer {model['shape']}: no merged group "
+                        f"lowered (whole-layer fusion regressed)")
+    if not model["tapped_edges"]:
+        problems.append(f"model_layer {model['shape']}: no residual tap "
+                        f"exported")
+    if model["measured_speedup"] < MODEL_SPEEDUP_FLOOR:
+        problems.append(f"model_layer {model['shape']}: measured_speedup "
+                        f"{model['measured_speedup']:.2f} < floor "
+                        f"{MODEL_SPEEDUP_FLOOR}")
     if problems:
         raise SystemExit("graph_fusion gates failed:\n  "
                          + "\n  ".join(problems))
     print("graph_fusion gates passed "
           f"(hbm_ratio floor {HBM_RATIO_FLOOR}, measured_speedup floor "
-          f"{MEASURED_SPEEDUP_FLOOR}, bit parity)")
+          f"{MEASURED_SPEEDUP_FLOOR}, model_layer floor "
+          f"{MODEL_SPEEDUP_FLOOR}, bit parity)")
 
 
 if __name__ == "__main__":

@@ -473,11 +473,17 @@ def lower(alg: TensorAlgebra, df: Optional[Dataflow] = None, *,
 class CompiledGroupKernel:
     """An entire fused graph group lowered to ONE Pallas kernel.
 
-    ``__call__(lhs, rhss, biases)`` takes the group's external operands
-    in *storage* layout (gemm weights are ``(n, k)``; the transpose the
-    per-node ``prepare`` would apply happens here) and returns the
-    group's result edge — every intermediate stays in VMEM scratch
-    inside the single ``pallas_call`` (``kernels/fused_chain.py``).
+    Two templates share this wrapper.  ``kind == "chain"`` (the streamed
+    lhs ladder): ``__call__(lhs, rhss, biases)`` takes the group's
+    external operands in *storage* layout (gemm weights are ``(n, k)``;
+    the transpose the per-node ``prepare`` would apply happens here) and
+    returns the group's result edge.  ``kind == "dag"`` (stage-major:
+    rhs-landing edges, batched stages, residuals, taps):
+    ``__call__(exts)`` takes ONE sequence of external operands matching
+    ``ext_roles`` order — again in storage layout, role casts applied
+    here — and returns ``(result, *taps)``.  Either way every
+    non-tapped intermediate stays in VMEM scratch inside the single
+    ``pallas_call`` (``kernels/fused_chain.py``).
     """
 
     group: str                          # FusedGroupPlan.name
@@ -486,11 +492,16 @@ class CompiledGroupKernel:
     m: int
     k0: int
     bm: int                             # m-block (grid phases)
-    interleave: str                     # "chain" | "stage"
+    interleave: str                     # "chain" | "stage" | "dag"
     cfg: ArrayConfig
     dtype: jnp.dtype
     interpret: bool
     backend: str
+    kind: str = "chain"                 # "chain" | "dag"
+    dag: Tuple[fused_chain_mod.DagStage, ...] = ()
+    ext_roles: Tuple[Tuple[str, str], ...] = ()     # (edge, role)
+    ext_shapes: Tuple[Tuple[int, ...], ...] = ()    # storage shapes
+    n_tap: int = 0
     #: where bm/interleave came from: "analytical" (the plan's agreed
     #: blocks) or "tuned" (the on-disk group tuning cache)
     source: str = "analytical"
@@ -505,13 +516,41 @@ class CompiledGroupKernel:
         default=None, repr=False, compare=False)
 
     def total_macs(self) -> int:
+        if self.kind == "dag":
+            return sum(st.m * st.k * st.n for st in self.dag)
         return sum(self.m * st.k * st.n for st in self.chain)
 
+    @staticmethod
+    def _dag_prep(ext, role, dtype):
+        """Storage layout -> kernel-facing layout, per operand role."""
+        if role == "rhs":
+            return ext.astype(dtype).T          # (n, k) storage -> (k, n)
+        if role == "res":
+            return ext.astype(jnp.float32)
+        if role == "bias":
+            return ext.astype(jnp.float32).reshape(1, -1)
+        return ext.astype(dtype)                # lhs / a3d / vec
+
     def _build_fn(self):
-        stages, dtype = self.chain, self.dtype
-        bm, interleave = self.bm, self.interleave
-        out_name, interpret = dtype.name, self.interpret
+        dtype, interpret = self.dtype, self.interpret
         xla = self.backend == "xla"
+        if self.kind == "dag":
+            dag, roles = self.dag, tuple(r for _, r in self.ext_roles)
+
+            @jax.jit
+            def fn(exts):
+                prepped = tuple(self._dag_prep(e, role, dtype)
+                                for e, role in zip(exts, roles))
+                if xla:
+                    return fused_chain_mod.dag_reference(
+                        prepped, stages=dag, out_dtype=dtype)
+                return fused_chain_mod.fused_dag(
+                    prepped, stages=dag, out_dtype=dtype,
+                    interpret=interpret)
+
+            return fn
+        stages, out_name = self.chain, dtype.name
+        bm, interleave = self.bm, self.interleave
 
         @jax.jit
         def fn(lhs, rhss, biases):
@@ -530,10 +569,13 @@ class CompiledGroupKernel:
 
         return fn
 
-    def __call__(self, lhs: jax.Array, rhss: Sequence[jax.Array],
-                 biases: Sequence[jax.Array] = ()) -> jax.Array:
+    def __call__(self, lhs, rhss: Sequence[jax.Array] = (),
+                 biases: Sequence[jax.Array] = ()):
         if self._fn is None:
             self._fn = self._build_fn()
+        if self.kind == "dag":
+            # single argument: the ext_roles-ordered operand sequence
+            return self._fn(tuple(jnp.asarray(e) for e in lhs))
         return self._fn(jnp.asarray(lhs),
                         tuple(jnp.asarray(r) for r in rhss),
                         tuple(jnp.asarray(b) for b in biases))
@@ -547,6 +589,8 @@ class CompiledGroupKernel:
         if rtol is None:
             rtol = 1e-5 if self.dtype == jnp.float32 else 2e-2
         rng = np.random.default_rng(seed)
+        if self.kind == "dag":
+            return self._validate_dag(rng, atol, rtol)
         lhs = rng.integers(-4, 5, size=(self.m, self.k0))
         rhss = [rng.integers(-4, 5, size=(st.n, st.k))
                 for st in self.chain]
@@ -575,6 +619,57 @@ class CompiledGroupKernel:
         self.validated = True
         return err
 
+    def _validate_dag(self, rng, atol: float, rtol: float) -> float:
+        """DAG branch of :meth:`validate`: random integer operands in
+        storage layout, compared (result + every tap) against a fp64
+        numpy mirror of the stage list."""
+        exts = [rng.integers(-4, 5, size=shape)
+                for shape in self.ext_shapes]
+        got = tuple(np.asarray(o, dtype=np.float64) for o in self(exts))
+        prepped = []
+        for e, (_, role) in zip(exts, self.ext_roles):
+            a = e.astype(np.float64)
+            prepped.append(a.T if role == "rhs" else a)
+        vals: list = []
+        taps: dict = {}
+        for st in self.dag:
+            def fetch(src, transpose=False):
+                where, idx = src
+                buf = prepped[idx] if where == "ext" else vals[idx]
+                return buf.T if transpose else buf
+            if st.kind == "batched":
+                acc = np.einsum("bkn,bk->bn", fetch(st.lhs),
+                                fetch(st.rhs))
+            else:
+                acc = fetch(st.lhs) @ fetch(
+                    st.rhs, transpose=st.rhs[0] == "scr")
+            if st.epilogue:
+                b = (prepped[st.bias].reshape(-1) if st.has_bias
+                     else None)
+                acc = epilogue_mod.apply_epilogue_np(acc, st.epilogue,
+                                                     bias=b)
+            y = acc
+            if st.res is not None:
+                y = y + fetch(st.res)
+            vals.append(y)
+            if st.tap >= 0:
+                taps[st.tap] = y
+        wants = (vals[-1],) + tuple(taps[i] for i in sorted(taps))
+        err_max = 0.0
+        for which, (g, want) in enumerate(zip(got, wants)):
+            err = float(np.abs(g - want).max()) if g.size else 0.0
+            bound = atol + rtol * (float(np.abs(want).max())
+                                   if want.size else 0.0)
+            if g.shape != want.shape or err > bound:
+                what = "result" if which == 0 else f"tap {which - 1}"
+                raise AssertionError(
+                    f"merged group {self.group} {what} diverged from "
+                    f"the DAG oracle: shape {g.shape} vs {want.shape}, "
+                    f"max err {err:.3e} (bound {bound:.3e})")
+            err_max = max(err_max, err)
+        self.validated = True
+        return err_max
+
 
 def _group_cache_key(plan, group, interpret: bool, backend: str) -> Tuple:
     """The merged-kernel compile/tune-cache identity: ``_cache_key``'s
@@ -582,7 +677,15 @@ def _group_cache_key(plan, group, interpret: bool, backend: str) -> Tuple:
     contributes its algebra, dataflow identity, epilogue spec and bias
     presence, in chain order — plus the shared config/dtype/backend.
     Two graphs whose fused chains are structurally identical share the
-    entry regardless of node or edge naming."""
+    entry regardless of node or edge naming.  A ``kind="dag"`` group
+    keys on its bound stage list + operand-role order instead — the
+    dag template ignores per-node dataflows (everything is whole-tensor
+    stage-major), and the hashable :class:`DagStage` tuple already
+    encodes shapes, wiring, epilogues and taps."""
+    if getattr(group, "kind", "chain") == "dag":
+        return ("fused_dag", group.dag,
+                tuple(role for _, role in group.ext_inputs),
+                plan.cfg, str(plan.dtype), bool(interpret), str(backend))
     stage_ids = []
     for name in group.stages:
         p = plan.nodes[name]
@@ -632,11 +735,15 @@ def lower_group(plan, group, *, interpret: bool = False,
             source = "tuned"
             measured_s = entry.get("merged_s")
             sequential_s = entry.get("sequential_s")
+    is_dag = getattr(group, "kind", "chain") == "dag"
     bm = group.bm if bm is None else bm
-    interleave = "chain" if interleave is None else interleave
-    if interleave not in fused_chain_mod.FUSED_INTERLEAVES:
-        raise ValueError(f"interleave must be one of "
-                         f"{fused_chain_mod.FUSED_INTERLEAVES}, "
+    if interleave is None:
+        interleave = (fused_chain_mod.DAG_INTERLEAVE if is_dag
+                      else "chain")
+    allowed = ((fused_chain_mod.DAG_INTERLEAVE,) if is_dag
+               else fused_chain_mod.FUSED_INTERLEAVES)
+    if interleave not in allowed:
+        raise ValueError(f"interleave must be one of {allowed}, "
                          f"got {interleave!r}")
     key = _group_variant_key(key, bm, interleave)
     with _CACHE_LOCK:
@@ -652,12 +759,19 @@ def lower_group(plan, group, *, interpret: bool = False,
                              and hit.total_macs() <= VALIDATE_MACS_LIMIT)):
             hit.validate()
         return hit
+    ext_shapes = (tuple(plan.graph.edge_shape(e)
+                        for e, _ in group.ext_inputs) if is_dag else ())
     kernel = CompiledGroupKernel(
         group=group.name, stages=tuple(group.stages), chain=group.chain,
         m=group.m, k0=group.k0, bm=bm, interleave=interleave,
         cfg=plan.cfg, dtype=jnp.dtype(plan.dtype), interpret=interpret,
         backend=backend, source=source, measured_s=measured_s,
-        sequential_s=sequential_s)
+        sequential_s=sequential_s,
+        kind="dag" if is_dag else "chain",
+        dag=group.dag if is_dag else (),
+        ext_roles=tuple(group.ext_inputs) if is_dag else (),
+        ext_shapes=ext_shapes,
+        n_tap=len(group.taps) if is_dag else 0)
     if validate or (validate is None
                     and kernel.total_macs() <= VALIDATE_MACS_LIMIT):
         kernel.validate()

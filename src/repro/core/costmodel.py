@@ -394,6 +394,12 @@ class GraphCostReport:
     reshard_bytes: Dict[str, float] = dataclasses.field(
         default_factory=dict)
     mesh_shape: Optional[Tuple[int, int]] = None
+    #: edges a merged group exports from an intermediate stage for an
+    #: out-of-group consumer ("group:edge"), and the HBM traffic those
+    #: taps pay (the write plus every out-of-group read, already part
+    #: of ``hbm_bytes`` — this attributes it)
+    tapped_edges: Tuple[str, ...] = ()
+    tap_hbm_bytes: float = 0.0
 
     @property
     def saved_hbm_bytes(self) -> float:

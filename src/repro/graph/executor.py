@@ -94,6 +94,9 @@ class GraphAccelerator:
     #: group name -> tuner verdict (``tune_group`` result) when built
     #: with ``tune=``; benchmark/report introspection only
     group_tuning: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    #: whether ``build(merge=...)`` allowed merged lowering at all —
+    #: lets ``describe()`` say *why* an eligible group runs sequentially
+    merge_enabled: bool = True
     validated: bool = False
 
     @property
@@ -110,6 +113,13 @@ class GraphAccelerator:
         merged = {g.name: g for g in self.plan.groups
                   if g.name in self.group_kernels}
         member_of = {s: g for g in merged.values() for s in g.stages}
+        # dispatch units: merged groups fire once (at any point where
+        # their external inputs are ready), everything else per node.
+        # A plain topo walk is NOT a valid schedule here: a tapped
+        # intermediate only materializes when its whole group fires, so
+        # an out-of-group consumer between two members must wait — a
+        # ready-queue over units handles any interleaving.
+        units = []
         for node in self.graph.topo_nodes:
             if node.name in folded:
                 continue                 # runs inside its producer kernel
@@ -117,39 +127,93 @@ class GraphAccelerator:
             if g is not None:
                 if node.name != g.stages[-1]:
                     continue             # runs inside the merged kernel
-                # last stage: every external operand (lhs, per-stage
-                # weights, biases) is topologically ready — fire the
-                # whole chain as one pallas_call
-                gk = self.group_kernels[g.name]
-                values[g.result_edge] = gk(
-                    values[g.lhs_edge],
-                    [values[e] for e in g.rhs_edges],
-                    [values[e] for e in g.bias_edges if e is not None])
-                continue
-            if node.algebra is not None:
-                p = self.plan.nodes[node.name]
-                kern = self.kernels[node.name]
-                ops = {t.name: values[e]
-                       for t, e in zip(node.algebra.inputs, node.inputs)}
-                if kern.bias_tensor is not None:
-                    ops[kern.bias_tensor] = values[p.bias_edge]
-                out = kern(ops)
-                if p.epilogue and not p.epilogue_fused:
-                    # legal-but-not-in-kernel spec: apply on the finished
-                    # tensor (the cost model charged the round trip)
-                    bias = (None if p.bias_edge is None else
-                        jnp.asarray(values[p.bias_edge], jnp.float32))
-                    out = epilogue_mod.apply_epilogue(
-                        out.astype(jnp.float32), p.epilogue,
-                        bias=bias).astype(kern.dtype)
-                values[p.result_edge] = out
+                units.append(("group", g))
             else:
-                bias = (None if len(node.inputs) == 1 else
-                    jnp.asarray(values[node.inputs[1]], jnp.float32))
-                x = jnp.asarray(values[node.inputs[0]], jnp.float32)
-                values[node.output] = epilogue_mod.apply_epilogue(
-                    x, (node.op,), bias=bias).astype(self.dtype)
+                units.append(("node", node))
+        pending = units
+        while pending:
+            later = []
+            for kind, u in pending:
+                if all(e in values for e in self._unit_inputs(kind, u)):
+                    self._run_unit(kind, u, values)
+                else:
+                    later.append((kind, u))
+            if len(later) == len(pending):   # pragma: no cover
+                raise RuntimeError(
+                    f"graph execution deadlocked; unschedulable units: "
+                    f"{[getattr(u, 'name', u) for _, u in later]}")
+            pending = later
         return values[self.graph.output]
+
+    def _unit_inputs(self, kind, u):
+        """Edges a dispatch unit needs materialized before it can run."""
+        if kind == "group":
+            if u.kind == "dag":
+                return [e for e, _ in u.ext_inputs]
+            return ([u.lhs_edge] + list(u.rhs_edges)
+                    + [e for e in u.bias_edges if e is not None])
+        edges = list(u.inputs)
+        p = self.plan.nodes.get(u.name)
+        if p is not None:
+            if p.bias_edge is not None:
+                edges.append(p.bias_edge)
+            if p.residual_edge is not None:
+                edges.append(p.residual_edge)
+        return edges
+
+    def _run_unit(self, kind, u, values) -> None:
+        if kind == "group":
+            gk = self.group_kernels[u.name]
+            if gk.kind == "dag":
+                res, *taps = gk([values[e] for e, _ in u.ext_inputs])
+                values[u.result_edge] = res
+                # memoize tapped intermediates like ordinary edges:
+                # out-of-group consumers read them, the producer never
+                # re-runs
+                for (_, tedge), t in zip(u.taps, taps):
+                    values[tedge] = t
+            else:
+                values[u.result_edge] = gk(
+                    values[u.lhs_edge],
+                    [values[e] for e in u.rhs_edges],
+                    [values[e] for e in u.bias_edges if e is not None])
+            return
+        node = u
+        if node.algebra is not None:
+            p = self.plan.nodes[node.name]
+            kern = self.kernels[node.name]
+            ops = {t.name: values[e]
+                   for t, e in zip(node.algebra.inputs, node.inputs)}
+            if kern.bias_tensor is not None:
+                ops[kern.bias_tensor] = values[p.bias_edge]
+            out = kern(ops)
+            if p.epilogue and not p.epilogue_fused:
+                # legal-but-not-in-kernel spec: apply on the finished
+                # tensor (the cost model charged the round trip)
+                bias = (None if p.bias_edge is None else
+                    jnp.asarray(values[p.bias_edge], jnp.float32))
+                out = epilogue_mod.apply_epilogue(
+                    out.astype(jnp.float32), p.epilogue,
+                    bias=bias).astype(kern.dtype)
+            if p.residual_edge is not None:
+                # folded external residual stream, dispatched
+                # sequentially: fp32 add after the epilogue — the exact
+                # math the merged dag kernel runs in-phase
+                out = (out.astype(jnp.float32)
+                       + jnp.asarray(values[p.residual_edge],
+                                     jnp.float32)
+                       ).astype(kern.dtype)
+            values[p.result_edge] = out
+        elif node.op == "add":
+            a = jnp.asarray(values[node.inputs[0]], jnp.float32)
+            b = jnp.asarray(values[node.inputs[1]], jnp.float32)
+            values[node.output] = (a + b).astype(self.dtype)
+        else:
+            bias = (None if len(node.inputs) == 1 else
+                jnp.asarray(values[node.inputs[1]], jnp.float32))
+            x = jnp.asarray(values[node.inputs[0]], jnp.float32)
+            values[node.output] = epilogue_mod.apply_epilogue(
+                x, (node.op,), bias=bias).astype(self.dtype)
 
     def cost_report(self) -> GraphCostReport:
         """Graph-level cycle/byte totals — fused edges priced at zero
@@ -178,11 +242,29 @@ class GraphAccelerator:
         return err
 
     def describe(self) -> str:
+        """Plan description + one line per fused group stating how it
+        actually executes: merged (with the chosen knobs) or sequential
+        **with the fallback reason verbatim** — "why didn't this fuse"
+        must be diagnosable from here alone."""
         lines = [self.plan.describe()]
-        for name, gk in self.group_kernels.items():
-            lines.append(
-                f"  merged {name}: one pallas_call, bm={gk.bm} "
-                f"interleave={gk.interleave} ({gk.source})")
+        for g in self.plan.groups:
+            gk = self.group_kernels.get(g.name)
+            if gk is not None:
+                lines.append(
+                    f"  merged {g.name}: one pallas_call, bm={gk.bm} "
+                    f"interleave={gk.interleave} ({gk.source})")
+                continue
+            if not g.eligible:
+                why = g.reason
+            elif not self.merge_enabled:
+                why = "merging disabled (merge=False)"
+            else:
+                res = self.group_tuning.get(g.name)
+                why = ("tuner verdict: sequential dispatch measured "
+                       "faster" if res is not None and not res.merged
+                       else "tuned cache verdict: sequential dispatch "
+                            "wins on this machine")
+            lines.append(f"  sequential {g.name}: {why}")
         return "\n".join(lines)
 
 
@@ -254,4 +336,5 @@ def build(graph: AlgebraGraph, *,
                 group_kernels[g.name] = gk
     return GraphAccelerator(graph=graph, plan=plan, kernels=kernels,
                             group_kernels=group_kernels,
-                            group_tuning=group_tuning)
+                            group_tuning=group_tuning,
+                            merge_enabled=bool(merge))

@@ -8,6 +8,12 @@ Nodes are either
   from the ``kernels/epilogue.py`` registry (``"gelu"``,
   ``"scale:0.125"``, ``"softmax"``, ``"bias"``).  A ``"bias"`` node
   takes a second input edge: the rank-1 bias vector.
+* **add** nodes — ``op == "add"``: elementwise sum of two same-shape
+  edges (the transformer residual stream).  Adds are not epilogue ops:
+  the planner folds one into the producing kernel only when its other
+  operand is a graph input (an external residual stream); otherwise it
+  stays a standalone node and the edge it reads from a merged group is
+  exported as a tap.
 
 Edges are tensors, named by strings; every edge has exactly one
 producer (a node or the graph input list) and any number of consumers.
@@ -62,6 +68,11 @@ class GraphNode:
                 raise ValueError(
                     f"node {self.name!r}: algebra {self.algebra.name} has "
                     f"{want} input tensors, got {len(self.inputs)} edges")
+        elif self.op == "add":
+            if len(self.inputs) != 2:
+                raise ValueError(
+                    f"node {self.name!r}: add takes 2 input edges, "
+                    f"got {len(self.inputs)}")
         else:
             opname, _ = epilogue_mod.parse_op(self.op)
             want = 2 if opname == "bias" else 1
@@ -159,6 +170,8 @@ class AlgebraGraph:
         x_shape = shapes.get(node.inputs[0])
         if pos == 0:
             return None          # epilogue x: any shape, propagated below
+        if node.op == "add":
+            return x_shape       # both addends share one shape
         return None if x_shape is None else (x_shape[-1],)
 
     def _infer_shapes(self) -> Dict[str, Tuple[int, ...]]:
@@ -204,6 +217,10 @@ class AlgebraGraph:
                 ins = dict(zip((t.name for t in node.algebra.inputs),
                                (values[e] for e in node.inputs)))
                 values[node.output] = node.algebra.reference(ins)
+            elif node.op == "add":
+                values[node.output] = (
+                    np.asarray(values[node.inputs[0]], np.float64)
+                    + np.asarray(values[node.inputs[1]], np.float64))
             else:
                 bias = (values[node.inputs[1]] if len(node.inputs) == 2
                     else None)

@@ -333,6 +333,250 @@ def fused_chain_matmul(lhs: jax.Array,
                         interpret=interpret)
 
 
+# ---------------------------------------------------------------------------
+# DAG megakernel — rhs-landing edges, batched stages, residuals, taps
+# ---------------------------------------------------------------------------
+
+#: the DAG template's single interleave order (stage-major, whole-tensor
+#: phases); recorded in the tuning cache alongside the chain knobs
+DAG_INTERLEAVE = "dag"
+
+
+@dataclasses.dataclass(frozen=True)
+class DagStage:
+    """One stage of a fused DAG group (hashable: jit-static + cache-key
+    component).  Unlike :class:`ChainStage`, operands are *bound*: each
+    source is ``("ext", i)`` (the i-th external kernel operand, already
+    in kernel-facing layout) or ``("scr", j)`` (stage j's VMEM scratch).
+
+    * ``kind == "dot"`` — ``out(m, n) = lhs(m, k) @ rhs(k, n)``; a
+      scratch-sourced rhs is read **transposed** (the producer's (n, m)
+      output lands on this stage's rhs — the rhs-landing fusion), so no
+      materialized transpose exists anywhere.
+    * ``kind == "batched"`` — the batched_gemv image
+      ``out[b, n] = sum_k lhs[b, k, n] * rhs[b, k]`` with the batch axis
+      aligned on the group's m axis (PR 4's LoweredForm batch folding,
+      merged); ``lhs`` is the external 3-D tensor.
+
+    ``res`` streams a same-shape residual added *after* the epilogue in
+    fp32 (the graph's ``add`` node folded in-kernel); ``tap >= 0``
+    exports this stage's block to HBM output slot ``tap`` so an unfused
+    consumer can read it without re-running the producer.
+    """
+
+    m: int
+    k: int
+    n: int
+    kind: str = "dot"                    # "dot" | "batched"
+    lhs: Tuple[str, int] = ("ext", 0)
+    rhs: Tuple[str, int] = ("ext", 0)
+    res: Optional[Tuple[str, int]] = None
+    epilogue: Tuple[str, ...] = ()
+    has_bias: bool = False
+    bias: int = -1                       # ext index of the (1, n) bias row
+    tap: int = -1                        # HBM tap output slot (-1: none)
+
+
+def validate_dag(stages: Sequence[DagStage]) -> Tuple[DagStage, ...]:
+    """Validate a DAG stage list: scratch references point backwards with
+    chaining shapes, epilogues parse, bias/tap wiring is consistent."""
+    stages = tuple(stages)
+    if not stages:
+        raise ValueError("a fused DAG needs at least one stage")
+    taps = []
+    for j, st in enumerate(stages):
+        if st.kind not in ("dot", "batched"):
+            raise ValueError(f"stage {j}: unknown kind {st.kind!r}")
+        if st.m <= 0 or st.k <= 0 or st.n <= 0:
+            raise ValueError(f"stage {j} has non-positive dims "
+                             f"({st.m}, {st.k}, {st.n})")
+        for role, src in (("lhs", st.lhs), ("rhs", st.rhs),
+                          ("res", st.res)):
+            if src is None:
+                continue
+            where, idx = src
+            if where not in ("ext", "scr"):
+                raise ValueError(f"stage {j} {role}: bad source {src!r}")
+            if where == "scr":
+                if not 0 <= idx < j:
+                    raise ValueError(f"stage {j} {role} reads scratch "
+                                     f"{idx}: must be an earlier stage")
+                p = stages[idx]
+                want = {"lhs": (st.m, st.k), "res": (st.m, st.n),
+                        "rhs": ((st.n, st.k) if st.kind == "dot"
+                                else (st.m, st.k))}[role]
+                if (p.m, p.n) != want:
+                    raise ValueError(
+                        f"stage {j} {role} reads stage {idx} "
+                        f"({p.m}, {p.n}) but needs {want}")
+        if st.kind == "batched" and st.lhs[0] != "ext":
+            raise ValueError(f"stage {j}: a batched stage's 3-D tensor "
+                             f"must be an external operand")
+        spec = _ep.validate_spec(st.epilogue)
+        if _ep.needs_bias(spec) != st.has_bias:
+            raise ValueError(
+                f"stage {j} epilogue {spec} "
+                f"{'needs' if _ep.needs_bias(spec) else 'has no'} bias "
+                f"but has_bias={st.has_bias}")
+        if st.has_bias and st.bias < 0:
+            raise ValueError(f"stage {j} has_bias without a bias ext "
+                             f"index")
+        if st.tap >= 0:
+            if j == len(stages) - 1:
+                raise ValueError("the final stage is the group result; "
+                                 "it cannot also be a tap")
+            taps.append(st.tap)
+    if sorted(taps) != list(range(len(taps))):
+        raise ValueError(f"tap slots must be 0..{len(taps) - 1} with no "
+                         f"gaps, got {sorted(taps)}")
+    return stages
+
+
+def dag_scratch_bytes(stages: Sequence[DagStage], itemsize: int) -> int:
+    """VMEM scratch of the DAG template: every non-final stage keeps its
+    full ``(m, n)`` output resident across the stage-major phases."""
+    return sum(st.m * st.n * itemsize for st in tuple(stages)[:-1])
+
+
+def _dag_fetch(ext, scr, src, transpose=False):
+    where, idx = src
+    buf = ext[idx][...] if where == "ext" else scr[idx][...]
+    return buf.T if transpose else buf
+
+
+def _dag_kernel(*refs, stages: Tuple[DagStage, ...], n_ext: int,
+                n_tap: int, dtype):
+    """Stage-major DAG body: grid ``(S,)`` with 'arbitrary' semantics —
+    phase ``j`` computes stage ``j`` whole-tensor, reading earlier
+    stages' scratch (plain for lhs/res, transposed for a landed rhs)."""
+    ext = refs[:n_ext]
+    o_ref = refs[n_ext]
+    tap_refs = refs[n_ext + 1:n_ext + 1 + n_tap]
+    scr = refs[n_ext + 1 + n_tap:]
+    s = pl.program_id(0)
+    last = len(stages) - 1
+    for j, st in enumerate(stages):
+        @pl.when(s == j)
+        def _run(j=j, st=st):
+            if st.kind == "batched":
+                a3 = _dag_fetch(ext, scr, st.lhs)       # (m, k, n)
+                v = _dag_fetch(ext, scr, st.rhs)        # (m, k)
+                acc = jax.lax.dot_general(
+                    v, a3, (((1,), (1,)), ((0,), (0,))),
+                    preferred_element_type=jnp.float32)
+            else:
+                x = _dag_fetch(ext, scr, st.lhs)
+                r = _dag_fetch(ext, scr, st.rhs,
+                               transpose=st.rhs[0] == "scr")
+                acc = jnp.dot(x, r, preferred_element_type=jnp.float32)
+            b_ref = ext[st.bias] if st.has_bias else None
+            y = _flush_block(acc, b_ref, st.epilogue, dtype)
+            if st.res is not None:
+                r_ = _dag_fetch(ext, scr, st.res)
+                # external residuals stream in fp32; scratch ones are in
+                # the chain dtype — the add itself is always fp32 (the
+                # standalone add node's exact math)
+                y = (y.astype(jnp.float32)
+                     + r_.astype(jnp.float32)).astype(dtype)
+            if st.tap >= 0:
+                tap_refs[st.tap][...] = y
+            if j == last:
+                o_ref[...] = y
+            else:
+                scr[j][...] = y
+
+
+@functools.partial(
+    jax.jit, static_argnames=("stages", "out_dtype", "interpret"))
+def _fused_dag(*exts, stages: Tuple[DagStage, ...], out_dtype: str,
+               interpret: bool):
+    from jax.experimental.pallas import tpu as pltpu
+
+    dt = jnp.dtype(out_dtype)
+    last = stages[-1]
+    n_tap = sum(1 for st in stages if st.tap >= 0)
+
+    def pin(rank):
+        return lambda s, _r=rank: (0,) * _r
+
+    in_specs = [pl.BlockSpec(tuple(e.shape), pin(e.ndim)) for e in exts]
+    out_shape = [jax.ShapeDtypeStruct((last.m, last.n), dt)]
+    out_specs = [pl.BlockSpec((last.m, last.n), pin(2))]
+    for st in sorted((s for s in stages if s.tap >= 0),
+                     key=lambda s: s.tap):
+        out_shape.append(jax.ShapeDtypeStruct((st.m, st.n), dt))
+        out_specs.append(pl.BlockSpec((st.m, st.n), pin(2)))
+    scratch = [pltpu.VMEM((st.m, st.n), dt) for st in stages[:-1]]
+    kernel = functools.partial(_dag_kernel, stages=stages,
+                               n_ext=len(exts), n_tap=n_tap, dtype=dt)
+    out = pl.pallas_call(
+        kernel,
+        grid=(len(stages),),
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shape,
+        scratch_shapes=scratch,
+        compiler_params=_compat.CompilerParams(
+            dimension_semantics=("arbitrary",)),
+        interpret=interpret,
+    )(*exts)
+    return tuple(out) if isinstance(out, (tuple, list)) else (out,)
+
+
+def fused_dag(exts: Sequence[jax.Array], *,
+              stages: Sequence[DagStage],
+              out_dtype=None,
+              interpret: bool = False) -> Tuple[jax.Array, ...]:
+    """Run a fused DAG group as one Pallas kernel.
+
+    ``exts`` are the external operands in *kernel-facing* layout (the
+    caller applies role casts: a landed external rhs is already
+    ``(k, n)``, residual streams fp32, bias rows ``(1, n)`` fp32).
+    Returns ``(result, *taps)`` — the final stage's output followed by
+    the tapped intermediates in tap-slot order.
+    """
+    stages = validate_dag(stages)
+    out_dtype = jnp.dtype(out_dtype or exts[0].dtype)
+    return _fused_dag(*exts, stages=stages, out_dtype=out_dtype.name,
+                      interpret=interpret)
+
+
+def dag_reference(exts: Sequence[jax.Array], *,
+                  stages: Sequence[DagStage],
+                  out_dtype=None) -> Tuple[jax.Array, ...]:
+    """Pure-jnp mirror of the DAG megakernel (the ``backend='xla'``
+    route): identical per-stage math without the Pallas grid."""
+    stages = validate_dag(stages)
+    dt = jnp.dtype(out_dtype or exts[0].dtype)
+    vals: list = []
+    taps: dict = {}
+    for j, st in enumerate(stages):
+        def fetch(src, transpose=False):
+            where, idx = src
+            buf = exts[idx] if where == "ext" else vals[idx]
+            return buf.T if transpose else buf
+        if st.kind == "batched":
+            acc = jax.lax.dot_general(
+                fetch(st.rhs), fetch(st.lhs),
+                (((1,), (1,)), ((0,), (0,))),
+                preferred_element_type=jnp.float32)
+        else:
+            acc = jnp.dot(fetch(st.lhs),
+                          fetch(st.rhs, transpose=st.rhs[0] == "scr"),
+                          preferred_element_type=jnp.float32)
+        if st.epilogue:
+            b = exts[st.bias].reshape(-1) if st.has_bias else None
+            acc = _ep.apply_epilogue(acc, st.epilogue, bias=b)
+        y = acc.astype(dt)
+        if st.res is not None:
+            y = (y.astype(jnp.float32)
+                 + fetch(st.res).astype(jnp.float32)).astype(dt)
+        vals.append(y)
+        if st.tap >= 0:
+            taps[st.tap] = y
+    return (vals[-1],) + tuple(taps[i] for i in sorted(taps))
+
+
 @functools.partial(jax.jit,
                    static_argnames=("stages", "out_dtype"))
 def chain_reference(lhs, *operands, stages: Tuple[ChainStage, ...],

@@ -20,12 +20,15 @@ keeps 512-device compiles tractable — DESIGN.md §7.2), with optional remat.
 """
 from __future__ import annotations
 
+import functools
+import math
 from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from ..configs.base import ModelConfig
+from ..kernels import epilogue as epilogue_mod
 from . import attention as attn
 from . import mlp as mlp_mod
 from . import ssm as ssm_mod
@@ -314,3 +317,48 @@ def forward(params: Dict, tokens: jax.Array, cfg: ModelConfig, *,
                      preferred_element_type=jnp.float32)
     logits = shard(logits, ("pod", "data"), None, "model")
     return logits, aux, (caches or None)
+
+
+# ---------------------------------------------------------------------------
+# Graph-expressible layer oracle (dense family)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("dtype",))
+def dense_layer_forward(x, wq, wk, wv_t, wo, w1, b1, w2,
+                        dtype: str = "float32"):
+    """One simplified dense-family layer, stage-for-stage identical to the
+    graph :func:`repro.graph.from_model.transformer_layer_graph` builds:
+    single head, no RoPE/GQA/norms (those are not graph-expressible yet),
+    weights in the paper's ``(out, in)`` storage so every projection is
+    ``X @ W.T``.  ``wv_t`` holds the value projection *pre-transposed*
+    ``(dv, d)`` so its product lands directly in the ``(dv, l)`` layout the
+    attend gemm's rhs wants.  Each stage accumulates in fp32, applies its
+    epilogue in fp32, then casts to ``dtype`` — the same flush the fused
+    megakernel and the sequential dispatcher perform, so parity with the
+    compiled graph is bitwise, not approximate.
+
+    Returns the post-MLP residual stream ``(l, d)``.
+    """
+    dt = jnp.dtype(dtype)
+    f32 = jnp.float32
+
+    def proj(a, w, epi=(), bias=None):
+        acc = jnp.dot(jnp.asarray(a).astype(dt),
+                      jnp.asarray(w).astype(dt).T,
+                      preferred_element_type=f32)
+        if epi:
+            acc = epilogue_mod.apply_epilogue(acc, epi, bias=bias)
+        return acc.astype(dt)
+
+    d = x.shape[-1]
+    q = proj(x, wq)
+    k = proj(x, wk)
+    vt = proj(wv_t, x)                     # (dv, l): values, born transposed
+    p = proj(q, k, epi=(f"scale:{1.0 / math.sqrt(d)}", "softmax"))
+    a = proj(p, vt)                        # vt lands on the rhs: p @ vt.T
+    o = proj(a, wo)
+    r1 = (o.astype(f32) + jnp.asarray(x).astype(f32)).astype(dt)
+    h = proj(r1, w1, epi=("bias", "gelu"),
+             bias=jnp.asarray(b1).astype(f32))
+    y = proj(h, w2)
+    return (y.astype(f32) + r1.astype(f32)).astype(dt)

@@ -252,6 +252,10 @@ def lookup_group(key: str) -> Optional[Dict[str, Any]]:
         if not _valid_group(entry):
             _STATS["invalid"] += 1
             _STATS["misses"] += 1
+            warnings.warn(
+                f"tuning cache group entry {key[:12]} is corrupt or "
+                f"version-skewed; falling back to the analytical verdict",
+                RuntimeWarning, stacklevel=2)
             return None
         _STATS["hits"] += 1
     return entry

@@ -420,6 +420,50 @@ def _sequential_runner(plan, group, *, interpret: bool, backend: str):
     return run
 
 
+def _sequential_dag_runner(plan, group, *, interpret: bool,
+                           backend: str):
+    """Sequential baseline for a ``kind="dag"`` group: the members run
+    one ``pallas_call`` each (as ``build(merge=False)`` would), values
+    memoized by edge name, folded residuals applied post-kernel in fp32;
+    returns ``(result, *taps)`` to mirror the merged kernel's outputs."""
+    from ..graph.executor import bias_operand_key
+    from ..kernels import epilogue as epilogue_mod
+    stages = []
+    for name in group.stages:
+        p = plan.nodes[name]
+        fused_ep = p.epilogue if p.epilogue_fused else ()
+        bias_key = (bias_operand_key(p.bias_edge)
+            if (fused_ep and p.bias_edge is not None
+                and epilogue_mod.needs_bias(fused_ep)) else None)
+        k = pipeline.lower(
+            p.node.algebra, p.dataflow, cfg=plan.cfg, dtype=p.dtype,
+            interpret=interpret, backend=backend, validate=False,
+            blocks=p.blocks if p.blocks_constrained else None,
+            epilogue=fused_ep, bias_tensor=bias_key,
+            fused_group=plan.fused_group_for(name))
+        stages.append((k, p))
+
+    def run(exts):
+        values = {e: jnp.asarray(v)
+                  for (e, _), v in zip(group.ext_inputs, exts)}
+        for k, p in stages:
+            node = p.node
+            ops = {t.name: values[e]
+                   for t, e in zip(node.algebra.inputs, node.inputs)}
+            if k.bias_tensor is not None:
+                ops[k.bias_tensor] = values[p.bias_edge]
+            out = k(ops)
+            if p.residual_edge is not None:
+                out = (out.astype(jnp.float32)
+                       + values[p.residual_edge].astype(jnp.float32)
+                       ).astype(k.dtype)
+            values[p.result_edge] = out
+        return (values[group.result_edge],
+                *(values[e] for _, e in group.taps))
+
+    return run
+
+
 def tune_group(plan, group, *,
                interpret: bool = False,
                backend: str = "pallas",
@@ -461,44 +505,80 @@ def tune_group(plan, group, *,
                 sequential_s=entry.get("sequential_s"),
                 cache_hit=True, trials=())
 
-    lhs, rhss, biases = _group_operands(group, seed)
     tol = _REL_TOL.get(jnp.dtype(group.dtype).name, 2e-2)
+    is_dag = getattr(group, "kind", "chain") == "dag"
 
     # --- the baseline merging must beat: sequential dispatch -----------
-    seq = _sequential_runner(plan, group, interpret=interpret,
-                             backend=backend)
-    ref_out = np.asarray(seq(lhs, rhss, biases), dtype=np.float64)
-    seq_meas = measure(seq, lhs, rhss, biases,
-                       warmup=warmup, repeats=repeats)
+    if is_dag:
+        rng = np.random.default_rng(seed)
+        exts = [rng.integers(-4, 5, size=plan.graph.edge_shape(e))
+                for e, _ in group.ext_inputs]
+        seq = _sequential_dag_runner(plan, group, interpret=interpret,
+                                     backend=backend)
+        ref_outs = [np.asarray(o, dtype=np.float64) for o in seq(exts)]
+        seq_meas = measure(seq, exts, warmup=warmup, repeats=repeats)
+    else:
+        lhs, rhss, biases = _group_operands(group, seed)
+        seq = _sequential_runner(plan, group, interpret=interpret,
+                                 backend=backend)
+        ref_out = np.asarray(seq(lhs, rhss, biases), dtype=np.float64)
+        seq_meas = measure(seq, lhs, rhss, biases,
+                           warmup=warmup, repeats=repeats)
 
     # --- the merged-variant sweep --------------------------------------
     trials: List[GroupTrial] = []
     best: Optional[Tuple[float, GroupVariant,
                          pipeline.CompiledGroupKernel]] = None
-    for bm in group_bm_candidates(group):
-        for interleave in FUSED_INTERLEAVES:
-            if len(trials) >= max_trials:
-                break
-            variant = GroupVariant(bm, interleave)
-            try:
-                k = pipeline.lower_group(
-                    plan, group, interpret=interpret, backend=backend,
-                    validate=False, bm=bm, interleave=interleave)
-                got = np.asarray(k(lhs, rhss, biases), dtype=np.float64)
-                err = _rel_err(got, ref_out)
-                if err > tol:
-                    trials.append(GroupTrial(variant, None, False,
-                                             f"rel err {err:.3e} > {tol}"))
-                    continue
-                meas = measure(k, lhs, rhss, biases,
-                               warmup=warmup, repeats=repeats)
-            except Exception as e:      # VMEM overflow, bad knob combo, ...
+    if is_dag:
+        # the stage-major dag template has no block/interleave ladder:
+        # one whole-tensor variant, measured against the same gate
+        from ..kernels.fused_chain import DAG_INTERLEAVE
+        variant = GroupVariant(group.m, DAG_INTERLEAVE)
+        try:
+            k = pipeline.lower_group(
+                plan, group, interpret=interpret, backend=backend,
+                validate=False, bm=group.m, interleave=DAG_INTERLEAVE)
+            got = [np.asarray(o, dtype=np.float64) for o in k(exts)]
+            err = max(_rel_err(g_, r_)
+                      for g_, r_ in zip(got, ref_outs))
+            if err > tol:
                 trials.append(GroupTrial(variant, None, False,
-                                         f"{type(e).__name__}: {e}"))
-                continue
-            trials.append(GroupTrial(variant, meas, True))
-            if best is None or meas.median_s < best[0]:
+                                         f"rel err {err:.3e} > {tol}"))
+            else:
+                meas = measure(k, exts, warmup=warmup, repeats=repeats)
+                trials.append(GroupTrial(variant, meas, True))
                 best = (meas.median_s, variant, k)
+        except Exception as e:          # VMEM overflow, lowering bug, ...
+            trials.append(GroupTrial(variant, None, False,
+                                     f"{type(e).__name__}: {e}"))
+    else:
+        for bm in group_bm_candidates(group):
+            for interleave in FUSED_INTERLEAVES:
+                if len(trials) >= max_trials:
+                    break
+                variant = GroupVariant(bm, interleave)
+                try:
+                    k = pipeline.lower_group(
+                        plan, group, interpret=interpret,
+                        backend=backend, validate=False, bm=bm,
+                        interleave=interleave)
+                    got = np.asarray(k(lhs, rhss, biases),
+                                     dtype=np.float64)
+                    err = _rel_err(got, ref_out)
+                    if err > tol:
+                        trials.append(GroupTrial(
+                            variant, None, False,
+                            f"rel err {err:.3e} > {tol}"))
+                        continue
+                    meas = measure(k, lhs, rhss, biases,
+                                   warmup=warmup, repeats=repeats)
+                except Exception as e:  # VMEM overflow, bad knob, ...
+                    trials.append(GroupTrial(variant, None, False,
+                                             f"{type(e).__name__}: {e}"))
+                    continue
+                trials.append(GroupTrial(variant, meas, True))
+                if best is None or meas.median_s < best[0]:
+                    best = (meas.median_s, variant, k)
 
     merged = best is not None and best[0] < seq_meas.median_s
     if merged:

@@ -186,8 +186,9 @@ class TestFusedChains:
 
 class TestMaterialization:
     def b_side_graph(self):
-        """g2 consumes g1's output as its *B* operand (stored
-        transposed by gemm's prepare) — never fusable."""
+        """g2 consumes g1's output as its *B* operand: the edge arrives
+        in B's (n, k) storage layout, so the merged DAG kernel reads the
+        producer's scratch transposed — no materialized transpose."""
         return AlgebraGraph(
             nodes=(
                 GraphNode(name="g1", inputs=("x", "W1"), output="h",
@@ -197,16 +198,26 @@ class TestMaterialization:
             ),
             inputs=("x", "W1", "y2"), output="z")
 
-    def test_b_side_edge_materializes(self):
+    def test_b_side_edge_fuses_on_rhs(self):
         g = self.b_side_graph()
         acc = repro.generate(g)
+        edge = next(e for e in acc.plan.edges if e.producer == "g1")
+        assert edge.fused and edge.side == "rhs"
         rep = acc.cost_report()
-        assert rep.fused_edges == ()
-        mats = dict(rep.materialized_edges)
-        assert any("transposed" in why for why in mats.values())
-        # the materialized edge is charged: write + read of 16x16 fp32
-        assert rep.edge_bytes["h"] == 2 * 16 * 16 * 4
+        assert "g1->g2:h" in rep.fused_edges
+        # no "stores transposed" fallback anywhere, nothing charged for h
+        assert not any("transposed" in why
+                       for _, why in rep.materialized_edges)
+        assert rep.edge_bytes.get("h", 0.0) == 0.0
+        (grp,) = acc.plan.groups
+        assert grp.kind == "dag" and grp.eligible
+        assert list(acc.group_kernels) == [grp.name]
         acc.validate(seed=0)
+        # bit-identical to sequential dispatch of the same plan
+        ops = g.random_operands(0)
+        seq = graph_executor.build(g, interpret=True, merge=False)
+        np.testing.assert_array_equal(np.asarray(acc(ops)),
+                                      np.asarray(seq(ops)))
 
     def test_dtype_change_blocks_fusion(self):
         g = AlgebraGraph(
@@ -284,11 +295,13 @@ class TestDiamond:
             got, g.reference(ops).astype(np.float64), atol=1e-3)
 
     def test_producer_runs_once_merged(self, monkeypatch):
-        # default path: q1->r merges (o1 is sole-consumed) so only p and
-        # q2 dispatch per-node; p still runs exactly once
+        # default path: the whole diamond merges into ONE dag megakernel
+        # (q2->r lands on r's rhs; the shared c strip feeds q1 AND q2
+        # from scratch) — zero per-node dispatches, one pallas_call
         g = self.diamond()
         acc = repro.generate(g)
-        assert list(acc.group_kernels) == ["mg:q1+r"]
+        assert list(acc.group_kernels) == ["mg:p+q1+q2+r"]
+        assert acc.plan.groups[0].kind == "dag"
         calls, group_calls = [], []
         orig = pipeline.CompiledKernel.__call__
         gorig = pipeline.CompiledGroupKernel.__call__
@@ -297,7 +310,7 @@ class TestDiamond:
             calls.append(self.algebra.name)
             return orig(self, operands)
 
-        def gcounting(self, lhs, rhss, biases=()):
+        def gcounting(self, lhs, rhss=(), biases=()):
             group_calls.append(self.group)
             return gorig(self, lhs, rhss, biases)
 
@@ -306,7 +319,7 @@ class TestDiamond:
                             gcounting)
         ops = g.random_operands(0)
         got = np.asarray(acc(ops))
-        assert len(calls) == 2            # p, q2 — p not re-computed
+        assert calls == []            # everything ran inside the group
         # one megakernel dispatch (its .group label may name another
         # graph's structurally-identical chain — entries are shared)
         assert len(group_calls) == 1
@@ -315,8 +328,8 @@ class TestDiamond:
 
     def test_fanout_edge_priced_per_consumer(self):
         rep = plan_graph(self.diamond()).cost_report()
-        # c fans out to two consumers: at most one write + unfused reads
-        # are charged; both q-edges into r can never both fuse (B side)
+        # every diamond edge fuses (c feeds both consumers from the
+        # merged group's scratch); the model can only save bytes
         assert rep.hbm_bytes <= rep.hbm_bytes_unfused
 
 
@@ -531,3 +544,269 @@ class TestMergedKernel:
         fused = pipeline.lower(alg, df, interpret=True,
                                fused_group="g:test")
         assert fused.source == "tuned" and fused.blocks == (4, 4, 4)
+
+
+# ---------------------------------------------------------------------------
+# Multi-output taps (ISSUE 10): merged groups exporting intermediates
+# ---------------------------------------------------------------------------
+
+def tap_diamond_graph(m=16, n=16, k=16):
+    """p -> t read by an in-group lhs consumer AND an out-of-group
+    residual add: the merged group must export ``t`` as a tap."""
+    return AlgebraGraph(
+        nodes=(
+            GraphNode(name="p", inputs=("x", "w0"), output="t",
+                      algebra=get_algebra("gemm", m=m, n=n, k=k)),
+            GraphNode(name="c1", inputs=("t", "w1"), output="y1",
+                      algebra=get_algebra("gemm", m=m, n=n, k=n)),
+            GraphNode(name="fin", inputs=("y1", "t"), output="out",
+                      op="add"),
+        ),
+        inputs=("x", "w0", "w1"), output="out")
+
+
+class TestTaps:
+    def test_tap_exported_for_residual_add(self):
+        g = tap_diamond_graph()
+        plan = plan_graph(g)
+        grp = next(x for x in plan.groups if x.eligible)
+        assert grp.kind == "dag" and grp.taps == (("p", "t"),)
+        rep = plan.cost_report()
+        assert any(t.endswith(":t") for t in rep.tapped_edges)
+        assert rep.tap_hbm_bytes > 0
+        acc = graph_executor.build(g, plan=plan, interpret=True)
+        assert acc.group_kernels[grp.name].n_tap == 1
+        acc.validate()
+        ops = g.random_operands(0)
+        seq = graph_executor.build(g, interpret=True, merge=False)
+        assert np.array_equal(np.asarray(acc(ops)), np.asarray(seq(ops)))
+
+    def test_tap_nondivisible_m(self):
+        # whole-tensor dag phases don't need m % pe == 0
+        g = tap_diamond_graph(m=24, n=16, k=16)
+        acc = graph_executor.build(g, interpret=True)
+        assert any(gk.n_tap == 1 for gk in acc.group_kernels.values())
+        acc.validate()
+        ops = g.random_operands(1)
+        seq = graph_executor.build(g, interpret=True, merge=False)
+        assert np.array_equal(np.asarray(acc(ops)), np.asarray(seq(ops)))
+
+    def test_tap_bf16_dtype(self):
+        g = tap_diamond_graph()
+        acc = graph_executor.build(g, interpret=True,
+                                   dtype=jnp.bfloat16)
+        assert any(gk.n_tap == 1 for gk in acc.group_kernels.values())
+        ops = g.random_operands(2)
+        out = np.asarray(acc(ops), dtype=np.float64)
+        ref = g.reference(ops)
+        assert np.max(np.abs(out - ref) / (np.abs(ref) + 1.0)) < 2e-2
+        seq = graph_executor.build(g, interpret=True, merge=False,
+                                   dtype=jnp.bfloat16)
+        assert np.array_equal(np.asarray(acc(ops)), np.asarray(seq(ops)))
+
+    def test_tap_consumer_on_other_mesh_partition_priced(self):
+        # the tap's out-of-group consumer takes the edge on its rhs,
+        # whose partition disagrees with the producer's out shards on a
+        # (1, 2) mesh -> the read is priced as an inter-chip reshard
+        # while the producer's group still merges and exports the tap
+        g = AlgebraGraph(
+            nodes=(
+                GraphNode(name="p", inputs=("x", "w0"), output="t",
+                          algebra=small_gemm()),
+                GraphNode(name="c1", inputs=("t", "w1"), output="y1",
+                          algebra=small_gemm()),
+                GraphNode(name="c2", inputs=("u", "t"), output="y2",
+                          algebra=small_gemm()),
+                GraphNode(name="fin", inputs=("y1", "y2"),
+                          output="out", op="add"),
+            ),
+            inputs=("x", "w0", "w1", "u"), output="out")
+        plan = plan_graph(g, mesh=(1, 2))
+        grp = next(x for x in plan.groups if x.eligible)
+        assert grp.taps == (("p", "t"),)
+        e = next(e for e in plan.edges
+                 if e.edge == "t" and e.consumer == "c2")
+        assert not e.fused and e.reshard_bytes > 0
+        assert "partition mismatch" in e.reason
+        rep = plan.cost_report()
+        assert rep.reshard_bytes.get("t", 0.0) > 0
+        assert any(t.endswith(":t") for t in rep.tapped_edges)
+        acc = graph_executor.build(g, plan=plan, interpret=True)
+        assert grp.name in acc.group_kernels
+        acc.validate()
+
+
+# ---------------------------------------------------------------------------
+# Whole-model graphs (ISSUE 10): the dense-family layer end to end
+# ---------------------------------------------------------------------------
+
+class TestModelLayer:
+    def _graph(self):
+        from repro.graph import from_model
+        return from_model.transformer_layer_graph(l=32, d=32, dv=32,
+                                                  f=64)
+
+    def test_model_layer_merges_attention_and_mlp(self):
+        plan = plan_graph(self._graph())
+        groups = [g for g in plan.groups if g.eligible]
+        assert len(groups) == 1
+        grp = groups[0]
+        assert grp.kind == "dag" and len(grp.dag) == 8
+        for member in ("scores", "attend", "up", "down"):
+            assert member in grp.stages
+        assert grp.taps == (("oproj", "r1"),)
+        # the PR 9 fallback reasons must be gone for registry gemms
+        for e in plan.edges:
+            assert "batched" not in e.reason
+            assert "transposed" not in e.reason
+        # k and vt land on consumer rhs sides, q/p/a/r1/h on lhs
+        sides = {(e.edge, e.consumer): e.side
+                 for e in plan.edges if e.fused}
+        assert sides[("k", "scores")] == "rhs"
+        assert sides[("vt", "attend")] == "rhs"
+        assert sides[("r1", "up")] == "lhs"
+
+    def test_model_layer_bit_parity_vs_forward(self):
+        from repro.graph import from_model
+        g = self._graph()
+        ops = g.random_operands(0)
+        acc = graph_executor.build(g, interpret=True)
+        assert len(acc.group_kernels) == 1
+        out = np.asarray(acc(ops))
+        oracle = np.asarray(from_model.layer_oracle(ops))
+        assert np.array_equal(out, oracle)
+        seq = graph_executor.build(g, interpret=True, merge=False)
+        assert np.array_equal(out, np.asarray(seq(ops)))
+        acc.validate()
+
+    def test_model_layer_from_config(self):
+        from repro.configs.registry import get_config
+        from repro.graph import from_model
+        cfg = get_config("granite-8b").reduced()
+        g = from_model.layer_graph_from_config(cfg, l=16)
+        assert g.edge_shape("x") == (16, cfg.d_model)
+        assert g.edge_shape("h_raw") == (16, cfg.d_ff)
+        bad = get_config("mamba2-370m").reduced()
+        with pytest.raises(ValueError, match="dense"):
+            from_model.layer_graph_from_config(bad)
+
+    def test_model_layer_batched_producer_fuses(self):
+        # "producer lowering is batched" is gone: an effective-2D
+        # batched_gemv producer merges into its gemm consumer
+        g = AlgebraGraph(
+            nodes=(
+                GraphNode(name="bv", inputs=("A3", "v"), output="t",
+                          algebra=get_algebra("batched_gemv",
+                                              m=16, k=8, n=16)),
+                GraphNode(name="c1", inputs=("t", "w"), output="y",
+                          algebra=small_gemm()),
+            ),
+            inputs=("A3", "v", "w"), output="y")
+        plan = plan_graph(g)
+        e = next(e for e in plan.edges if e.edge == "t")
+        assert e.fused
+        grp = next(x for x in plan.groups if x.eligible)
+        assert grp.kind == "dag"
+        assert [s.kind for s in grp.dag] == ["batched", "dot"]
+        acc = graph_executor.build(g, plan=plan, interpret=True)
+        assert grp.name in acc.group_kernels
+        acc.validate()
+        ops = g.random_operands(3)
+        seq = graph_executor.build(g, interpret=True, merge=False)
+        assert np.array_equal(np.asarray(acc(ops)), np.asarray(seq(ops)))
+
+
+# ---------------------------------------------------------------------------
+# describe() surfaces fallback reasons (ISSUE 10 satellite)
+# ---------------------------------------------------------------------------
+
+class TestDescribeReasons:
+    def test_describe_surfaces_ineligible_reason(self):
+        # a VMEM-starved config declines the merge; the group's reason
+        # string must appear verbatim in the accelerator's describe()
+        g = chain_graph()
+        cfg = dse.ArrayConfig(vmem_budget_bytes=256)
+        plan = plan_graph(g, cfg=cfg)
+        grp = plan.groups[0]
+        assert not grp.eligible and grp.reason
+        acc = graph_executor.build(g, plan=plan, cfg=cfg,
+                                   interpret=True)
+        text = acc.describe()
+        assert f"sequential {grp.name}: {grp.reason}" in text
+
+    def test_describe_surfaces_merge_disabled(self):
+        g = chain_graph()
+        acc = graph_executor.build(g, interpret=True, merge=False)
+        assert "merging disabled (merge=False)" in acc.describe()
+
+    def test_describe_surfaces_merged_knobs(self):
+        g = chain_graph()
+        acc = graph_executor.build(g, interpret=True)
+        grp = next(x for x in acc.plan.groups if x.eligible)
+        assert f"merged {grp.name}" in acc.describe()
+
+
+# ---------------------------------------------------------------------------
+# Tune-cache groups-map robustness (ISSUE 10 satellite)
+# ---------------------------------------------------------------------------
+
+def _write_group_entry(digest, entry):
+    import json
+    path = tune_cache.cache_path()
+    path.parent.mkdir(parents=True, exist_ok=True)
+    path.write_text(json.dumps({
+        "version": tune_cache.SCHEMA_VERSION,
+        "variants": {}, "choices": {},
+        "groups": {digest: entry},
+    }))
+
+
+class TestTuneCacheGroups:
+    def _digest(self, plan, grp):
+        return tune_cache.key_of(
+            pipeline._group_cache_key(plan, grp, True, "pallas"))
+
+    def test_group_corrupt_entry_warns_and_falls_back(self):
+        g = chain_graph()
+        plan = plan_graph(g)
+        grp = next(x for x in plan.groups if x.eligible)
+        digest = self._digest(plan, grp)
+        _write_group_entry(digest, {"version": tune_cache.SCHEMA_VERSION,
+                                    "merged": "yes"})
+        with pytest.warns(RuntimeWarning, match="corrupt or version"):
+            assert tune_cache.lookup_group(digest) is None
+        assert tune_cache.cache_info()["invalid"] >= 1
+        # the lower path degrades to the analytical merge, not a crash
+        with pytest.warns(RuntimeWarning, match="corrupt or version"):
+            acc = graph_executor.build(g, plan=plan, interpret=True)
+        assert grp.name in acc.group_kernels
+        assert acc.group_kernels[grp.name].source == "analytical"
+        acc.validate()
+
+    def test_group_version_skew_warns_and_falls_back(self):
+        g = chain_graph()
+        plan = plan_graph(g)
+        grp = next(x for x in plan.groups if x.eligible)
+        digest = self._digest(plan, grp)
+        _write_group_entry(digest,
+                           {"version": tune_cache.SCHEMA_VERSION + 1,
+                            "merged": True, "bm": 16,
+                            "interleave": "chain"})
+        with pytest.warns(RuntimeWarning, match="corrupt or version"):
+            assert tune_cache.lookup_group(digest) is None
+        with pytest.warns(RuntimeWarning, match="corrupt or version"):
+            acc = graph_executor.build(g, plan=plan, interpret=True)
+        assert acc.group_kernels[grp.name].source == "analytical"
+        acc.validate()
+
+    def test_group_unreadable_file_warns_and_falls_back(self):
+        path = tune_cache.cache_path()
+        path.parent.mkdir(parents=True, exist_ok=True)
+        path.write_text("{ this is not json")
+        with pytest.warns(RuntimeWarning, match="unreadable"):
+            assert tune_cache.lookup_group("deadbeef") is None
+        assert tune_cache.cache_info()["corrupt"] >= 1
+        g = chain_graph()
+        acc = graph_executor.build(g, interpret=True)
+        assert acc.group_kernels
+        acc.validate()
